@@ -1,0 +1,119 @@
+"""Shared tuning sweep: every unique conv task of the paper's 7 networks
+tuned by ARCO / AutoTVM-analog / CHAMELEON-analog at an equal measurement
+budget (the paper's equal-compilation-duration protocol).
+
+Results are cached as JSON under artifacts/tuning/ so table6 / fig5 / fig6 /
+fig7 all read one sweep.  REPRO_PAPER=1 switches to the full Table-4 budget
+(1024 measurements/task); the default budget (256) preserves every paper
+trend at ~6x less wall time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import mappo
+from repro.core.baselines import autotvm_tune, chameleon_tune, random_tune
+from repro.core.task import Task, conv_tasks
+from repro.core.tuner import TunerConfig, arco_tune
+from repro.models import cnn
+
+ART = os.environ.get("REPRO_ART", "artifacts/tuning")
+PAPER = os.environ.get("REPRO_PAPER", "0") == "1"
+
+NETWORKS = list(cnn.MODELS)
+FRAMEWORKS = ("autotvm", "chameleon", "arco")
+
+
+def tuner_config() -> TunerConfig:
+    if PAPER:  # Table 4: 16 x 64 ~ 1000 measurements
+        return TunerConfig(iteration_opt=16, b_measure=64,
+                           episodes_per_iter=8,
+                           mappo=mappo.MappoConfig(n_steps=250, n_envs=16),
+                           gbt_rounds=40)
+    return TunerConfig(iteration_opt=8, b_measure=32, episodes_per_iter=3,
+                       mappo=mappo.MappoConfig(n_steps=64, n_envs=16),
+                       gbt_rounds=24)
+
+
+def unique_tasks() -> Dict[str, Task]:
+    """Global dedupe across networks (identical conv workloads share one
+    tuning run, as TVM task extraction does)."""
+    seen: Dict[str, Task] = {}
+    for net in NETWORKS:
+        for t in conv_tasks(net):
+            key = json.dumps(sorted(t.space.workload.items()))
+            if key not in seen:
+                seen[key] = t
+    return seen
+
+
+def _tune(framework: str, space, cfg: TunerConfig):
+    fn = {"arco": arco_tune, "autotvm": autotvm_tune,
+          "chameleon": chameleon_tune, "random": random_tune}[framework]
+    t0 = time.perf_counter()
+    r = fn(space, cfg)
+    wall = time.perf_counter() - t0
+    return {"best_latency": r.best_latency,
+            "n_measurements": r.n_measurements,
+            "wall_s": wall,
+            "history": r.history,
+            "measurements": r.measurements,
+            "best_config": np.asarray(r.best_config).tolist()}
+
+
+def run_sweep(force: bool = False) -> Dict:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"sweep_{'paper' if PAPER else 'default'}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = tuner_config()
+    tasks = unique_tasks()
+    out: Dict[str, Dict] = {"tasks": {}, "config": {
+        "budget": cfg.iteration_opt * cfg.b_measure, "paper": PAPER}}
+    for i, (key, task) in enumerate(tasks.items()):
+        wl = task.space.workload
+        entry = {"workload": wl}
+        for fw in FRAMEWORKS:
+            entry[fw] = _tune(fw, task.space, cfg)
+        out["tasks"][key] = entry
+        print(f"[{i + 1}/{len(tasks)}] {wl['h']}x{wl['w']}x{wl['ci']}->"
+              f"{wl['co']} k{wl['kh']}s{wl['stride']}: " +
+              " ".join(f"{fw}={entry[fw]['best_latency']:.2e}"
+                       for fw in FRAMEWORKS), flush=True)
+        with open(path, "w") as f:   # checkpoint the sweep as it goes
+            json.dump(out, f)
+    return out
+
+
+def network_results(sweep: Dict) -> Dict[str, Dict[str, float]]:
+    """Per-network mean inference time (conv-dominated) per framework."""
+    out: Dict[str, Dict[str, float]] = {}
+    for net in NETWORKS:
+        res = {fw: 0.0 for fw in FRAMEWORKS}
+        wall = {fw: 0.0 for fw in FRAMEWORKS}
+        for t in conv_tasks(net):
+            key = json.dumps(sorted(t.space.workload.items()))
+            entry = sweep["tasks"][key]
+            for fw in FRAMEWORKS:
+                res[fw] += entry[fw]["best_latency"] * t.multiplicity
+        # tuning wall time: each network pays for its unique tasks
+        seen = set()
+        for t in conv_tasks(net):
+            key = json.dumps(sorted(t.space.workload.items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            for fw in FRAMEWORKS:
+                wall[fw] += sweep["tasks"][key][fw]["wall_s"]
+        out[net] = {"latency": res, "tuning_wall_s": wall}
+    return out
+
+
+if __name__ == "__main__":
+    run_sweep(force=os.environ.get("REPRO_FORCE", "0") == "1")

@@ -1,0 +1,14 @@
+"""Beyond-paper demo: ARCO tunes the pod-level execution configuration.
+
+    PYTHONPATH=src python examples/arco_sharding_search.py \
+        --arch qwen2-1.5b --shape train_4k --budget 10
+
+Each "hardware measurement" is a full 256-device SPMD compile + roofline
+analysis — the expensive-oracle regime the paper's Confidence Sampling
+targets.  See EXPERIMENTS.md §Perf for the three-cell hillclimb this drives.
+"""
+import sys
+from repro.launch.autotune import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: co-optimize one convolution with ARCO and deploy the result.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. builds the 7-knob design space (Table 2) for a ResNet-style conv;
+2. runs the MAPPO+CS tuning loop against the TPU latency oracle;
+3. compares against the software-only baselines;
+4. executes the tuned configuration through the Pallas GEMM core and
+   checks it against the jnp conv oracle.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mappo
+from repro.core.baselines import autotvm_tune, random_tune
+from repro.core.design_space import KNOB_NAMES, DesignSpace
+from repro.core.tuner import TunerConfig, arco_tune
+from repro.hw.analytical import conv2d_gflops, conv2d_min_latency
+from repro.kernels import ops, ref
+
+
+def main():
+    workload = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3,
+                    stride=1, pad=1)
+    space = DesignSpace.for_conv2d(workload)
+    print(f"design space: {space.size} configurations "
+          f"({len(KNOB_NAMES)} knobs)")
+
+    cfg = TunerConfig(iteration_opt=6, b_measure=48, episodes_per_iter=3,
+                      mappo=mappo.MappoConfig(n_steps=64, n_envs=16),
+                      gbt_rounds=20)
+
+    t0 = time.time()
+    result = arco_tune(space, cfg)
+    print(f"\nARCO:    best latency {result.best_latency * 1e6:9.2f} us  "
+          f"({conv2d_gflops(workload, result.best_latency):7.1f} GFLOP/s)  "
+          f"[{result.n_measurements} measurements, "
+          f"{time.time() - t0:.1f}s]")
+
+    for name, fn in (("AutoTVM*", autotvm_tune), ("random", random_tune)):
+        r = fn(space, cfg)
+        print(f"{name:8s} best latency {r.best_latency * 1e6:9.2f} us  "
+              f"({conv2d_gflops(workload, r.best_latency):7.1f} GFLOP/s)  "
+              f"[hardware knobs frozen at default geometry]")
+    print(f"roofline lower bound: "
+          f"{conv2d_min_latency(workload) * 1e6:.2f} us")
+
+    vals = np.asarray(space.values(jnp.asarray(result.best_config)))
+    named = dict(zip(KNOB_NAMES, vals.astype(int)))
+    print(f"\ntuned configuration: {named}")
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 14, 14, 256),
+                          jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 256, 256),
+                          jnp.float32)
+    out = ops.conv2d_from_knobs(
+        x, w, 1, 1, tile_b=named["tile_b"], tile_h=named["tile_h"],
+        tile_w=named["tile_w"], tile_ci=named["tile_ci"],
+        tile_co=named["tile_co"], h_threading=named["h_threading"],
+        oc_threading=named["oc_threading"])
+    err = float(jnp.abs(out - ref.conv2d_ref(x, w, 1, 1)).max())
+    print(f"deployed through Pallas GEMM core (interpret mode): "
+          f"max |err| vs oracle = {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper end-to-end flow: tune every ResNet-18 conv task, compare ARCO vs
+the software-only baselines (Table 6 / Fig. 5 protocol at reduced budget).
+
+    PYTHONPATH=src python examples/tune_resnet18.py [--budget 256]
+"""
+import argparse
+import time
+
+from repro.core import mappo
+from repro.core.baselines import autotvm_tune, chameleon_tune
+from repro.core.task import conv_tasks, network_latency
+from repro.core.tuner import TunerConfig, arco_tune
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=192)
+    args = ap.parse_args()
+
+    n_iter = max(args.budget // 32, 2)
+    cfg = TunerConfig(iteration_opt=n_iter, b_measure=32,
+                      episodes_per_iter=3,
+                      mappo=mappo.MappoConfig(n_steps=64, n_envs=16),
+                      gbt_rounds=20)
+    tasks = conv_tasks("resnet-18")
+    print(f"ResNet-18: {sum(t.multiplicity for t in tasks)} conv layers, "
+          f"{len(tasks)} unique tuning tasks, "
+          f"budget {args.budget} measurements/task\n")
+
+    frameworks = {"arco": arco_tune, "autotvm": autotvm_tune,
+                  "chameleon": chameleon_tune}
+    totals, walls = {}, {}
+    for fw, tune in frameworks.items():
+        t0 = time.time()
+        best = {}
+        for t in tasks:
+            r = tune(t.space, cfg)
+            best[t.name] = r.best_latency
+        totals[fw] = network_latency(tasks, best)
+        walls[fw] = time.time() - t0
+        print(f"{fw:10s} network conv latency "
+              f"{totals[fw] * 1e6:10.1f} us   tuning wall {walls[fw]:6.1f}s")
+
+    print(f"\nthroughput vs AutoTVM*: "
+          f"ARCO {totals['autotvm'] / totals['arco']:.2f}x  "
+          f"(paper Fig.5: ResNet-18 ~1.38x), "
+          f"CHAMELEON {totals['autotvm'] / totals['chameleon']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

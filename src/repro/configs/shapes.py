@@ -1,0 +1,88 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs per cell.
+
+Every architecture is paired with four shapes:
+
+    train_4k     seq 4,096   global_batch 256   (training step)
+    prefill_32k  seq 32,768  global_batch 32    (inference prefill)
+    decode_32k   seq 32,768  global_batch 128   (one decode token, KV at 32k)
+    long_500k    seq 524,288 global_batch 1     (long-context decode)
+
+``decode_*``/``long_*`` lower ``serve_step`` (one token against a cache of
+``seq`` tokens), not ``train_step``.  ``long_500k`` requires sub-quadratic
+attention and is skipped (with reason) for pure full-attention archs.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — the
+dry-run never allocates.  Modality frontends are stubs: the VLM entry takes
+precomputed patch embeddings, the audio entry precomputed frames.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ArchConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """(supported, reason-if-not). The long-context rule from the brief."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: O(S^2) prefill / O(S) "
+                       "per-token full KV at 512k — skipped per brief; run "
+                       "for SSM/hybrid/SWA archs only")
+    return True, ""
+
+
+def _i32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = batch_override or shape.global_batch
+    s = shape.seq
+    f32 = lambda sh: jax.ShapeDtypeStruct(sh, cfg.dtype)
+
+    if shape.kind == "train":
+        text = s - cfg.vision_prefix if cfg.vision_prefix else s
+        spec: Dict[str, Any] = {"tokens": _i32((b, text)),
+                                "labels": _i32((b, text))}
+        if cfg.vision_prefix:
+            spec["patches"] = f32((b, cfg.vision_prefix, cfg.d_model))
+        if cfg.enc_dec:
+            spec["frames"] = f32((b, cfg.enc_seq, cfg.d_model))
+        return spec
+
+    if shape.kind == "prefill":
+        text = s - cfg.vision_prefix if cfg.vision_prefix else s
+        spec = {"tokens": _i32((b, text))}
+        if cfg.vision_prefix:
+            spec["patches"] = f32((b, cfg.vision_prefix, cfg.d_model))
+        if cfg.enc_dec:
+            spec["frames"] = f32((b, cfg.enc_seq, cfg.d_model))
+        return spec
+
+    # decode: one new token against a cache of `s` tokens
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"tokens": _i32((b, 1)), "cache": cache}

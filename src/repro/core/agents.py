@@ -1,0 +1,110 @@
+"""The three ARCO agents (Table 1/2) — observation & action encodings + nets.
+
+Networks follow §4.1 exactly:
+  policy  (per agent): 1 hidden layer, 20 neurons, ReLU; softmax output head
+  critic  (shared)   : 3 hidden layers, 20 neurons each, tanh; scalar output
+
+Each agent owns a subset of the 7 knobs and acts with a categorical action
+over joint per-knob {-1, 0, +1} adjustments (3^k actions for k knobs).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design_space import AGENT_KNOBS, AGENTS, N_KNOBS
+
+N_WFEAT = 11  # workload feature length (design_space.workload_features)
+
+AGENT_N_KNOBS: Dict[str, int] = {a: len(k) for a, k in AGENT_KNOBS.items()}
+AGENT_N_ACTIONS: Dict[str, int] = {a: 3 ** n for a, n in AGENT_N_KNOBS.items()}
+AGENT_OBS_DIM: Dict[str, int] = {a: n + N_WFEAT for a, n in AGENT_N_KNOBS.items()}
+STATE_DIM = N_KNOBS + N_WFEAT
+
+
+def _dense_init(rng, n_in, n_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / n_in))
+    w_rng, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(w_rng, (n_in, n_out), jnp.float32) * scale,
+            "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def init_policy(rng, obs_dim: int, n_actions: int, hidden: int = 20):
+    r1, r2 = jax.random.split(rng)
+    return {"h": _dense_init(r1, obs_dim, hidden),
+            "out": _dense_init(r2, hidden, n_actions, scale=0.01)}
+
+
+def init_critic(rng, state_dim: int, hidden: int = 20):
+    rs = jax.random.split(rng, 4)
+    return {"h1": _dense_init(rs[0], state_dim, hidden),
+            "h2": _dense_init(rs[1], hidden, hidden),
+            "h3": _dense_init(rs[2], hidden, hidden),
+            "out": _dense_init(rs[3], hidden, 1, scale=0.01)}
+
+
+def policy_logits(params, obs: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(obs @ params["h"]["w"] + params["h"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def critic_value(params, state: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(state @ params["h1"]["w"] + params["h1"]["b"])
+    h = jnp.tanh(h @ params["h2"]["w"] + params["h2"]["b"])
+    h = jnp.tanh(h @ params["h3"]["w"] + params["h3"]["b"])
+    return (h @ params["out"]["w"] + params["out"]["b"])[..., 0]
+
+
+def init_marl_params(rng) -> Dict:
+    rs = jax.random.split(rng, len(AGENTS) + 1)
+    params = {a: init_policy(rs[i], AGENT_OBS_DIM[a], AGENT_N_ACTIONS[a])
+              for i, a in enumerate(AGENTS)}
+    params["critic"] = init_critic(rs[-1], STATE_DIM)
+    return params
+
+
+# ---------------------------------------------------------------- encodings
+
+def knob_positions(config: jnp.ndarray, n_choices: jnp.ndarray) -> jnp.ndarray:
+    """Normalized knob positions in [0,1]; config (..., N_KNOBS) int."""
+    denom = jnp.maximum(n_choices.astype(jnp.float32) - 1.0, 1.0)
+    return config.astype(jnp.float32) / denom
+
+
+def local_obs(agent: str, config: jnp.ndarray, n_choices: jnp.ndarray,
+              wfeat: jnp.ndarray) -> jnp.ndarray:
+    pos = knob_positions(config, n_choices)
+    own = pos[..., jnp.asarray(AGENT_KNOBS[agent])]
+    wf = jnp.broadcast_to(wfeat, (*config.shape[:-1], N_WFEAT))
+    return jnp.concatenate([own, wf], axis=-1)
+
+
+def global_state(config: jnp.ndarray, n_choices: jnp.ndarray,
+                 wfeat: jnp.ndarray) -> jnp.ndarray:
+    pos = knob_positions(config, n_choices)
+    wf = jnp.broadcast_to(wfeat, (*config.shape[:-1], N_WFEAT))
+    return jnp.concatenate([pos, wf], axis=-1)
+
+
+def decode_action(agent: str, action: jnp.ndarray) -> jnp.ndarray:
+    """Categorical action -> per-knob deltas in {-1,0,+1}, (..., k)."""
+    k = AGENT_N_KNOBS[agent]
+    digits = []
+    a = action
+    for _ in range(k):
+        digits.append(a % 3 - 1)
+        a = a // 3
+    return jnp.stack(digits[::-1], axis=-1).astype(jnp.int32)
+
+
+def combined_deltas(actions: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Merge per-agent deltas into a full (..., N_KNOBS) delta vector."""
+    shape = actions[AGENTS[0]].shape
+    out = jnp.zeros((*shape, N_KNOBS), jnp.int32)
+    for agent in AGENTS:
+        d = decode_action(agent, actions[agent])
+        out = out.at[..., jnp.asarray(AGENT_KNOBS[agent])].set(d)
+    return out

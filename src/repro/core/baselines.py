@@ -1,0 +1,322 @@
+"""Baseline tuners the paper compares against.
+
+* ``random_tune``     — uniform random search (sanity floor).
+* ``autotvm_tune``    — AutoTVM analog: GBT (xgb-reg) cost model + parallel
+                        simulated annealing over predicted fitness, measuring
+                        the top-b candidates per round (Table 5 setup).
+* ``chameleon_tune``  — CHAMELEON analog: single-agent PPO adaptive
+                        exploration + K-means adaptive sampling of candidates.
+
+Faithful to §4.1: neither baseline explores *hardware* knobs — they run with
+the default accelerator geometry (``default_hardware_config``), exactly as the
+paper pins AutoTVM/CHAMELEON to the default VTA++ specification.  ARCO is the
+only method allowed to co-optimize the hardware knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agents as A
+from repro.core import cost_model as CM
+from repro.core import mappo
+from repro.core.design_space import (AGENT_KNOBS, DesignSpace, N_KNOBS)
+from repro.core.tuner import TuneResult, TunerConfig, _measure, _Tracker
+
+HW_KNOBS = np.asarray(AGENT_KNOBS["hardware"])
+
+
+def default_hardware_config(space: DesignSpace) -> np.ndarray:
+    """Default accelerator geometry (the VTA++ default-spec analog).
+
+    MXU-native: K-tile ~256 elements, N-tile ~128, batch tile 1.
+    Returns per-knob choice indices for the three hardware knobs.
+    """
+    wl = space.workload
+    khkw = wl.get("kh", 1) * wl.get("kw", 1)
+    targets = {0: 1, 1: max(256 // khkw, 1), 2: 128}
+    idx = np.zeros(3, np.int64)
+    for j, knob in enumerate(HW_KNOBS):
+        vals = np.asarray(space.choices[knob], np.float64)
+        idx[j] = int(np.argmin(np.abs(np.log2(vals) - np.log2(targets[knob]))))
+    return idx
+
+
+def frozen_mask_and_base(space: DesignSpace) -> Tuple[np.ndarray, np.ndarray]:
+    frozen = np.zeros(N_KNOBS, bool)
+    frozen[HW_KNOBS] = True
+    base = np.zeros(N_KNOBS, np.int64)
+    base[HW_KNOBS] = default_hardware_config(space)
+    return frozen, base
+
+
+def _random_configs(space: DesignSpace, rng: np.random.Generator, n: int,
+                    frozen: Optional[np.ndarray] = None,
+                    base: Optional[np.ndarray] = None) -> np.ndarray:
+    out = np.stack([rng.integers(0, len(c), size=n) for c in space.choices],
+                   axis=1)
+    if frozen is not None:
+        out[:, frozen] = base[frozen]
+    return np.unique(out, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Random search
+# --------------------------------------------------------------------------
+
+def random_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+                budget: Optional[int] = None) -> TuneResult:
+    rng = np.random.default_rng(cfg.seed)
+    frozen, base = frozen_mask_and_base(space)
+    track = _Tracker()
+    budget = budget or cfg.iteration_opt * cfg.b_measure
+    measured = set()
+    while track.count < budget:
+        n = min(cfg.b_measure, budget - track.count)
+        cand = _random_configs(space, rng, 2 * n, frozen, base)
+        cand = np.asarray([c for c in cand if tuple(c) not in measured])
+        if len(cand) == 0:
+            break
+        cand = cand[:n]
+        measured.update(tuple(c) for c in cand)
+        lat, _ = _measure(space, cand)
+        track.record(cand, lat)
+    return track.result()
+
+
+# --------------------------------------------------------------------------
+# AutoTVM analog: GBT + parallel simulated annealing
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_steps", "n_chains"))
+def _sa_search(rng, env: mappo.EnvParams, forest: CM.Forest,
+               config0: jnp.ndarray, frozen: jnp.ndarray,
+               n_steps: int, n_chains: int):
+    """Parallel Metropolis chains maximizing the GBT-predicted fitness."""
+
+    def fitness(c):
+        return mappo.surrogate_reward(env, forest, c)
+
+    def step(carry, inp):
+        configs, fit, temp = carry
+        rng_t = inp
+        r1, r2, r3 = jax.random.split(rng_t, 3)
+        # propose: one random *unfrozen* knob +-1 per chain
+        logits = jnp.where(frozen, -1e9, 0.0)
+        knob = jax.random.categorical(r1, jnp.broadcast_to(logits,
+                                                           (n_chains, N_KNOBS)))
+        delta = jax.random.choice(r2, jnp.asarray([-1, 1], jnp.int32),
+                                  (n_chains,))
+        prop = configs.at[jnp.arange(n_chains), knob].add(delta)
+        prop = jnp.clip(prop, 0, env.n_choices - 1)
+        new_fit = fitness(prop)
+        accept = jax.random.uniform(r3, (n_chains,)) < jnp.exp(
+            jnp.clip((new_fit - fit) / jnp.maximum(temp, 1e-6), -50, 50))
+        configs = jnp.where(accept[:, None], prop, configs)
+        fit = jnp.where(accept, new_fit, fit)
+        return (configs, fit, temp * 0.98), (configs, fit)
+
+    rngs = jax.random.split(rng, n_steps)
+    fit0 = fitness(config0)
+    (_, _, _), (visited, vfit) = jax.lax.scan(
+        step, (config0, fit0, jnp.asarray(1.0)), rngs)
+    return visited.reshape(-1, N_KNOBS), vfit.reshape(-1)
+
+
+def autotvm_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+                 budget: Optional[int] = None,
+                 n_chains: int = 64, sa_steps: Optional[int] = None,
+                 eps_greedy: float = 0.1) -> TuneResult:
+    rng = jax.random.PRNGKey(cfg.seed)
+    np_rng = np.random.default_rng(cfg.seed)
+    env = mappo.env_params_from_space(space)
+    gbt = CM.GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+    frozen_np, base = frozen_mask_and_base(space)
+    frozen = jnp.asarray(frozen_np)
+    track = _Tracker()
+    budget = budget or cfg.iteration_opt * cfg.b_measure
+    sa_steps = sa_steps or cfg.mappo.n_steps  # matched search effort
+
+    seed_cfgs = _random_configs(space, np_rng, cfg.b_measure, frozen_np, base)
+    lat, feats = _measure(space, seed_cfgs)
+    track.record(seed_cfgs, lat)
+    gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+    measured = {tuple(c) for c in seed_cfgs}
+
+    while track.count < budget:
+        forest = gbt.to_forest()
+        rng, r_sa, r_init = jax.random.split(rng, 3)
+        c0 = _random_configs(space, np_rng, n_chains, frozen_np, base)
+        c0 = np.resize(c0, (n_chains, N_KNOBS))
+        visited, vfit = _sa_search(r_sa, env, forest,
+                                   jnp.asarray(c0, jnp.int32), frozen,
+                                   sa_steps, n_chains)
+        visited, vfit = np.asarray(visited), np.asarray(vfit)
+        order = np.argsort(-vfit)
+        n_meas = min(cfg.b_measure, budget - track.count)
+        n_rand = int(n_meas * eps_greedy)
+        cand: List[np.ndarray] = []
+        seen = set(measured)
+        for i in order:
+            t = tuple(visited[i])
+            if t not in seen:
+                seen.add(t)
+                cand.append(visited[i])
+            if len(cand) >= n_meas - n_rand:
+                break
+        rand = _random_configs(space, np_rng, n_rand + 1, frozen_np, base)
+        for c in rand:
+            if len(cand) >= n_meas:
+                break
+            if tuple(c) not in seen:
+                seen.add(tuple(c))
+                cand.append(c)
+        if not cand:  # software knob space exhausted
+            break
+        cand_np = np.asarray(cand[:n_meas]).reshape(-1, N_KNOBS)
+        lat, feats = _measure(space, cand_np)
+        track.record(cand_np, lat)
+        measured.update(tuple(c) for c in cand_np)
+        gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+    return track.result()
+
+
+# --------------------------------------------------------------------------
+# CHAMELEON analog: single-agent PPO + adaptive (K-means) sampling
+# --------------------------------------------------------------------------
+
+def _init_single_agent(rng):
+    return {"policy": A.init_policy(rng, A.STATE_DIM, N_KNOBS * 3),
+            "critic": A.init_critic(jax.random.fold_in(rng, 1), A.STATE_DIM)}
+
+
+def _factored_logits(params, state):
+    return A.policy_logits(params["policy"], state).reshape(
+        *state.shape[:-1], N_KNOBS, 3)
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def _chameleon_episode(params, opt_state, rng, env: mappo.EnvParams,
+                       forest: CM.Forest, frozen: jnp.ndarray, base: jnp.ndarray,
+                       hp: mappo.MappoConfig):
+    """Single-agent PPO over the software knobs (factorized 3-way heads)."""
+
+    def step(carry, rng_t):
+        config = carry
+        state = A.global_state(config, env.n_choices, env.wfeat)
+        logits = _factored_logits(params, state)
+        a = jax.random.categorical(rng_t, logits, axis=-1)       # (E, K)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 a[..., None], -1)[..., 0].sum(-1)
+        deltas = jnp.where(frozen, 0, a - 1)
+        new_config = jnp.clip(config + deltas, 0, env.n_choices - 1)
+        value = A.critic_value(params["critic"], state)
+        reward = mappo.surrogate_reward(env, forest, new_config)
+        return new_config, (state, a, lp, value, reward, new_config)
+
+    r_init, r_roll = jax.random.split(rng)
+    u = jax.random.uniform(r_init, (hp.n_envs, N_KNOBS))
+    config0 = (u * env.n_choices).astype(jnp.int32)
+    config0 = jnp.where(frozen, base, config0)
+    rngs = jax.random.split(r_roll, hp.n_steps)
+    last, (states, acts, lps, values, rewards, configs) = jax.lax.scan(
+        step, config0, rngs)
+    last_v = A.critic_value(params["critic"],
+                            A.global_state(last, env.n_choices, env.wfeat))
+    advs, returns = mappo.gae(rewards, values, last_v, hp.gamma,
+                              hp.gae_lambda)
+
+    def loss_fn(p):
+        adv_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+        logits = _factored_logits(p, states)
+        lp_all = jax.nn.log_softmax(logits, -1)
+        lp = jnp.take_along_axis(lp_all, acts[..., None], -1)[..., 0].sum(-1)
+        ratio = jnp.exp(lp - lps)
+        pg = jnp.minimum(ratio * adv_n,
+                         jnp.clip(ratio, 1 - hp.clip, 1 + hp.clip) * adv_n)
+        ent = -jnp.sum(jnp.exp(lp_all) * lp_all, -1).sum(-1).mean()
+        v = A.critic_value(p["critic"], states)
+        vloss = jnp.mean(jnp.square(v - returns))
+        return -pg.mean() + hp.vf_coef * vloss - hp.ent_coef * ent
+
+    from repro.optim.adam import Adam
+    opt = Adam(lr=hp.lr, grad_clip_norm=1.0)
+    for _ in range(hp.epochs):
+        grads = jax.grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+    return params, opt_state, configs.reshape(-1, N_KNOBS)
+
+
+def _kmeans(X: np.ndarray, k: int, rng: np.random.Generator,
+            iters: int = 10) -> np.ndarray:
+    """Lloyd's algorithm; returns the index of the member nearest each
+    centroid (CHAMELEON's adaptive-sampling representative selection)."""
+    k = min(k, len(X))
+    centers = X[rng.choice(len(X), k, replace=False)].astype(np.float64)
+    for _ in range(iters):
+        d = ((X[:, None, :] - centers[None]) ** 2).sum(-1)
+        assign = d.argmin(1)
+        for j in range(k):
+            pts = X[assign == j]
+            if len(pts):
+                centers[j] = pts.mean(0)
+    d = ((X[:, None, :] - centers[None]) ** 2).sum(-1)
+    return np.unique(d.argmin(0))
+
+
+def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+                   budget: Optional[int] = None) -> TuneResult:
+    rng = jax.random.PRNGKey(cfg.seed)
+    np_rng = np.random.default_rng(cfg.seed)
+    env = mappo.env_params_from_space(space)
+    params = _init_single_agent(rng)
+    from repro.optim.adam import Adam
+    opt_state = Adam(lr=cfg.mappo.lr, grad_clip_norm=1.0).init(params)
+    gbt = CM.GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+    frozen_np, base_np = frozen_mask_and_base(space)
+    frozen = jnp.asarray(frozen_np)
+    base = jnp.asarray(base_np, jnp.int32)
+    track = _Tracker()
+    budget = budget or cfg.iteration_opt * cfg.b_measure
+
+    seed_cfgs = _random_configs(space, np_rng, cfg.b_measure, frozen_np,
+                                base_np)
+    lat, feats = _measure(space, seed_cfgs)
+    track.record(seed_cfgs, lat)
+    gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+    measured = {tuple(c) for c in seed_cfgs}
+
+    it = 0
+    while track.count < budget:
+        it += 1
+        forest = gbt.to_forest()
+        pool: List[np.ndarray] = []
+        for _ in range(cfg.episodes_per_iter):
+            rng, r_ep = jax.random.split(rng)
+            params, opt_state, visited = _chameleon_episode(
+                params, opt_state, r_ep, env, forest, frozen, base, cfg.mappo)
+            pool.append(np.asarray(visited))
+        pool_np = np.unique(np.concatenate(pool), axis=0)
+        pool_np = np.asarray([c for c in pool_np if tuple(c) not in measured])
+        if len(pool_np) == 0:
+            pool_np = _random_configs(space, np_rng, cfg.b_measure, frozen_np,
+                                      base_np)
+            pool_np = np.asarray([c for c in pool_np
+                                  if tuple(c) not in measured])
+        if len(pool_np) == 0:  # software knob space exhausted
+            break
+        n_meas = min(cfg.b_measure, budget - track.count)
+        # Adaptive sampling: cluster the candidate pool, measure the
+        # representative nearest each centroid.
+        reps = _kmeans(pool_np.astype(np.float64), n_meas, np_rng)
+        cand = pool_np[reps][:n_meas].reshape(-1, N_KNOBS)
+        lat, feats = _measure(space, cand)
+        track.record(cand, lat)
+        measured.update(tuple(c) for c in cand)
+        gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+    return track.result()

@@ -1,0 +1,215 @@
+"""Learned cost models.
+
+``GBTModel`` is the ``modeGBT = xgb-reg`` analog from Table 4/5: a gradient-
+boosted ensemble of fixed-depth regression trees, fit in numpy on measured
+(configuration, fitness) pairs and exported as dense arrays so predictions are
+pure-jnp (and therefore usable *inside* the jitted MARL rollout as the
+surrogate reward).
+
+Trees are complete binary trees of depth ``depth``: internal node arrays
+(feature index, threshold) plus a leaf-value array.  Degenerate nodes route
+everything left with threshold=+inf.  The forest is refit from scratch on all
+measurements each tuning iteration (as AutoTVM does), with a fixed number of
+rounds so jitted consumers never change shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Forest(NamedTuple):
+    """Dense forest representation; all jnp consumers take this."""
+    feat: jnp.ndarray    # (T, n_internal) int32
+    thresh: jnp.ndarray  # (T, n_internal) float32
+    leaf: jnp.ndarray    # (T, n_leaves) float32
+    base: jnp.ndarray    # () float32 — mean target
+    scale: jnp.ndarray   # () float32 — target std (denormalization)
+    lr: jnp.ndarray      # () float32
+
+
+def empty_forest(n_rounds: int, depth: int, n_features: int) -> Forest:
+    n_internal = 2 ** depth - 1
+    n_leaves = 2 ** depth
+    return Forest(
+        feat=jnp.zeros((n_rounds, n_internal), jnp.int32),
+        thresh=jnp.full((n_rounds, n_internal), jnp.inf, jnp.float32),
+        leaf=jnp.zeros((n_rounds, n_leaves), jnp.float32),
+        base=jnp.asarray(0.0, jnp.float32),
+        scale=jnp.asarray(1.0, jnp.float32),
+        lr=jnp.asarray(1.0, jnp.float32),
+    )
+
+
+def predict(forest: Forest, x: jnp.ndarray) -> jnp.ndarray:
+    """Forest prediction. x: (..., n_features) -> (...)."""
+    depth = int(np.log2(forest.leaf.shape[-1]))
+    n_internal = forest.feat.shape[-1]
+
+    def one_tree(feat, thresh, leaf, xi):
+        idx = jnp.zeros((), jnp.int32)
+
+        def step(_, idx):
+            go_right = xi[feat[idx]] > thresh[idx]
+            return 2 * idx + 1 + go_right.astype(jnp.int32)
+
+        idx = jax.lax.fori_loop(0, depth, step, idx)
+        return leaf[idx - n_internal]
+
+    def one_sample(xi):
+        vals = jax.vmap(one_tree, in_axes=(0, 0, 0, None))(
+            forest.feat, forest.thresh, forest.leaf, xi)
+        return forest.base + forest.lr * jnp.sum(vals)
+
+    flat = x.reshape(-1, x.shape[-1])
+    out = jax.vmap(one_sample)(flat)
+    return out.reshape(x.shape[:-1]) * forest.scale
+
+
+# --------------------------------------------------------------------------
+# numpy-side fitting
+# --------------------------------------------------------------------------
+
+def _best_split(Xn: np.ndarray, gn: np.ndarray, min_leaf: int):
+    """Vectorized exact split search: sort + prefix sums per feature.
+
+    Returns (gain, feature, threshold) or (0, None, None).
+    SSE decomposition: sse = sum(g^2) - sum(g)^2/n per side.
+    """
+    n = len(gn)
+    parent_sse = float(np.sum(gn * gn) - gn.sum() ** 2 / n)
+    best_gain, best_f, best_t = 0.0, None, None
+    for f in range(Xn.shape[1]):
+        col = Xn[:, f]
+        order = np.argsort(col, kind="stable")
+        cs, gs = col[order], gn[order]
+        csum = np.cumsum(gs)
+        csum2 = np.cumsum(gs * gs)
+        # valid split after position i (left = [0..i]) where value changes
+        nl = np.arange(1, n)
+        valid = (cs[1:] != cs[:-1]) & (nl >= min_leaf) & (n - nl >= min_leaf)
+        if not valid.any():
+            continue
+        sl, sl2 = csum[:-1], csum2[:-1]
+        sr, sr2 = csum[-1] - sl, csum2[-1] - sl2
+        sse = (sl2 - sl * sl / nl) + (sr2 - sr * sr / (n - nl))
+        sse = np.where(valid, sse, np.inf)
+        i = int(np.argmin(sse))
+        gain = parent_sse - float(sse[i])
+        if gain > best_gain:
+            best_gain, best_f = gain, f
+            best_t = float((cs[i] + cs[i + 1]) / 2.0)
+    return best_gain, best_f, best_t
+
+
+def _fit_tree(X: np.ndarray, g: np.ndarray, depth: int, min_leaf: int = 4,
+              rng: Optional[np.random.Generator] = None):
+    """Greedy SSE regression tree on residuals g; returns dense arrays."""
+    n_internal = 2 ** depth - 1
+    n_leaves = 2 ** depth
+    feat = np.zeros(n_internal, np.int32)
+    thresh = np.full(n_internal, np.inf, np.float32)
+    leaf = np.zeros(n_leaves, np.float32)
+
+    # node -> sample indices; process level by level
+    node_samples = {0: np.arange(len(g))}
+    for node in range(n_internal):
+        idx = node_samples.get(node, np.array([], np.int64))
+        left, right = 2 * node + 1, 2 * node + 2
+        if len(idx) < 2 * min_leaf:
+            node_samples[left] = idx
+            node_samples[right] = np.array([], np.int64)
+            continue
+        Xn, gn = X[idx], g[idx]
+        gain, f, t = _best_split(Xn, gn, min_leaf)
+        if f is None:
+            node_samples[left] = idx
+            node_samples[right] = np.array([], np.int64)
+            continue
+        feat[node] = f
+        thresh[node] = t
+        mask = Xn[:, f] <= t
+        node_samples[left] = idx[mask]
+        node_samples[right] = idx[~mask]
+
+    for l in range(n_leaves):
+        idx = node_samples.get(n_internal + l, np.array([], np.int64))
+        leaf[l] = float(g[idx].mean()) if len(idx) else 0.0
+    return feat, thresh, leaf
+
+
+@dataclasses.dataclass
+class GBTModel:
+    """xgb-reg analog.  Fit in numpy, predict in jnp via ``to_forest()``."""
+
+    n_rounds: int = 40
+    depth: int = 4
+    learning_rate: float = 0.15
+    n_features: int = 18
+    seed: int = 0
+
+    def __post_init__(self):
+        self._forest = empty_forest(self.n_rounds, self.depth, self.n_features)
+        self._X: Optional[np.ndarray] = None
+        self._y: Optional[np.ndarray] = None
+
+    @property
+    def n_samples(self) -> int:
+        return 0 if self._X is None else len(self._X)
+
+    def update(self, X: np.ndarray, y: np.ndarray) -> None:
+        """Append measurements and refit from scratch (constant shapes)."""
+        X = np.asarray(X, np.float32).reshape(-1, self.n_features)
+        y = np.asarray(y, np.float32).reshape(-1)
+        if self._X is None:
+            self._X, self._y = X, y
+        else:
+            self._X = np.concatenate([self._X, X])
+            self._y = np.concatenate([self._y, y])
+        self._fit()
+
+    def _fit(self) -> None:
+        X, y = self._X, self._y
+        scale = float(y.std()) or 1.0
+        yn = (y - y.mean()) / scale
+        base = 0.0
+        pred = np.zeros_like(yn)
+        feats, threshs, leaves = [], [], []
+        rng = np.random.default_rng(self.seed)
+        for _ in range(self.n_rounds):
+            resid = yn - pred
+            f, t, l = _fit_tree(X, resid, self.depth, rng=rng)
+            feats.append(f)
+            threshs.append(t)
+            leaves.append(l)
+            # dense re-predict via numpy traversal
+            pred += self.learning_rate * _np_tree_predict(f, t, l, X, self.depth)
+        self._forest = Forest(
+            feat=jnp.asarray(np.stack(feats)),
+            thresh=jnp.asarray(np.stack(threshs)),
+            leaf=jnp.asarray(np.stack(leaves)),
+            base=jnp.asarray(float(y.mean() / scale), jnp.float32),
+            scale=jnp.asarray(scale, jnp.float32),
+            lr=jnp.asarray(self.learning_rate, jnp.float32),
+        )
+
+    def to_forest(self) -> Forest:
+        return self._forest
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.asarray(predict(self._forest, jnp.asarray(X, jnp.float32)))
+
+
+def _np_tree_predict(feat, thresh, leaf, X, depth):
+    n_internal = 2 ** depth - 1
+    idx = np.zeros(len(X), np.int64)
+    for _ in range(depth):
+        f = feat[idx]
+        t = thresh[idx]
+        go_right = X[np.arange(len(X)), f] > t
+        idx = 2 * idx + 1 + go_right.astype(np.int64)
+    return leaf[idx - n_internal]

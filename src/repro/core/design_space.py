@@ -1,0 +1,208 @@
+"""Design space for ARCO co-optimization.
+
+A design space is a set of *knobs*, each with a discrete list of choices
+(powers of two bounded by the workload), partitioned across the three agents
+exactly as in Table 2 of the paper:
+
+    hardware   agent: tile_b, tile_ci, tile_co   (GEMM-core geometry)
+    scheduling agent: h_threading, oc_threading  (work parallelization)
+    mapping    agent: tile_h, tile_w             (spatial blocking)
+
+A *configuration* is an int32 vector of per-knob choice indices.  Choice
+tables are padded to a fixed width so that value lookup, mutation and fitness
+evaluation are all jnp-traceable and vmappable over candidate populations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.hw import analytical
+from repro.hw.tpu_spec import DEFAULT, TpuSpec
+
+AGENTS = ("hardware", "scheduling", "mapping")
+
+# Knob order is fixed; agents own contiguous views via AGENT_KNOBS.
+KNOB_NAMES = ("tile_b", "tile_ci", "tile_co", "h_threading", "oc_threading",
+              "tile_h", "tile_w")
+AGENT_KNOBS: Dict[str, Tuple[int, ...]] = {
+    "hardware": (0, 1, 2),
+    "scheduling": (3, 4),
+    "mapping": (5, 6),
+}
+N_KNOBS = len(KNOB_NAMES)
+MAX_CHOICES = 12  # padded choice-table width
+
+
+def _pow2_choices(limit: int, lo: int = 1, cap: int = MAX_CHOICES) -> List[int]:
+    """Powers of two in [lo, limit]; at most ``cap`` entries (largest kept)."""
+    limit = max(int(limit), lo)
+    vals = [2 ** e for e in range(0, int(math.log2(limit)) + 1) if 2 ** e >= lo]
+    if not vals:
+        vals = [lo]
+    return vals[-cap:]
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    """Discrete knob space + fitness oracle for one tuning task."""
+
+    knob_names: Tuple[str, ...]
+    choices: Tuple[Tuple[int, ...], ...]       # per-knob choice values
+    agent_knobs: Dict[str, Tuple[int, ...]]
+    workload: Dict[str, int]                   # static task description
+    kind: str                                  # "conv2d" | "matmul"
+    spec: TpuSpec = DEFAULT
+
+    # ---------------------------------------------------------- construction
+    @staticmethod
+    def for_conv2d(workload: Dict[str, int], spec: TpuSpec = DEFAULT) -> "DesignSpace":
+        oh, ow, m, n, k = analytical.conv2d_im2col_dims(
+            workload["b"], workload["h"], workload["w"], workload["ci"],
+            workload["co"], workload["kh"], workload["kw"],
+            workload["stride"], workload["pad"])
+        choices = (
+            tuple(_pow2_choices(workload["b"])),        # tile_b
+            tuple(_pow2_choices(workload["ci"])),       # tile_ci
+            tuple(_pow2_choices(workload["co"])),       # tile_co
+            (1, 2, 4),                                  # h_threading
+            (1, 2, 4),                                  # oc_threading
+            tuple(_pow2_choices(oh)),                   # tile_h
+            tuple(_pow2_choices(ow)),                   # tile_w
+        )
+        return DesignSpace(KNOB_NAMES, choices, dict(AGENT_KNOBS), dict(workload),
+                           "conv2d", spec)
+
+    @staticmethod
+    def for_matmul(m: int, n: int, k: int, spec: TpuSpec = DEFAULT) -> "DesignSpace":
+        """Matmul task: tile_b/tile_h/tile_w jointly block M; ci->K; co->N."""
+        workload = {"m": m, "n": n, "k": k}
+        choices = (
+            tuple(_pow2_choices(min(m, 256))),          # tile_b   (M blocking)
+            tuple(_pow2_choices(k)),                    # tile_ci  (K blocking)
+            tuple(_pow2_choices(n)),                    # tile_co  (N blocking)
+            (1, 2, 4),                                  # h_threading
+            (1, 2, 4),                                  # oc_threading
+            tuple(_pow2_choices(min(m, 256))),          # tile_h   (M blocking)
+            (1,),                                       # tile_w unused
+        )
+        return DesignSpace(KNOB_NAMES, choices, dict(AGENT_KNOBS), workload,
+                           "matmul", spec)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_knobs(self) -> int:
+        return len(self.knob_names)
+
+    @property
+    def n_choices(self) -> np.ndarray:
+        return np.array([len(c) for c in self.choices], np.int32)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod([len(c) for c in self.choices]))
+
+    def choice_table(self) -> jnp.ndarray:
+        """(n_knobs, MAX_CHOICES) float table, padded with the last value."""
+        tab = np.zeros((self.n_knobs, MAX_CHOICES), np.float32)
+        for i, ch in enumerate(self.choices):
+            padded = list(ch) + [ch[-1]] * (MAX_CHOICES - len(ch))
+            tab[i] = padded
+        return jnp.asarray(tab)
+
+    # ------------------------------------------------------- config handling
+    def values(self, config: jnp.ndarray) -> jnp.ndarray:
+        """config (..., n_knobs) int -> knob values (..., n_knobs) float."""
+        tab = self.choice_table()
+        return jax.vmap(lambda c: tab[jnp.arange(self.n_knobs), c])(
+            config.reshape(-1, self.n_knobs)).reshape(*config.shape)
+
+    def random_configs(self, rng: jax.Array, n: int) -> jnp.ndarray:
+        maxc = jnp.asarray(self.n_choices)
+        u = jax.random.uniform(rng, (n, self.n_knobs))
+        return (u * maxc).astype(jnp.int32)
+
+    def clip(self, config: jnp.ndarray) -> jnp.ndarray:
+        return jnp.clip(config, 0, jnp.asarray(self.n_choices) - 1)
+
+    def apply_deltas(self, config: jnp.ndarray, deltas: jnp.ndarray) -> jnp.ndarray:
+        """Apply per-knob {-1,0,+1} adjustments with bound clipping."""
+        return self.clip(config + deltas.astype(jnp.int32))
+
+    def neighbor(self, rng: jax.Array, config: jnp.ndarray) -> jnp.ndarray:
+        """Single random ±1 move on one random knob (for SA baselines)."""
+        k_rng, d_rng = jax.random.split(rng)
+        knob = jax.random.randint(k_rng, (), 0, self.n_knobs)
+        delta = jax.random.choice(d_rng, jnp.asarray([-1, 1], jnp.int32))
+        return self.clip(config.at[knob].add(delta))
+
+    # --------------------------------------------------------------- fitness
+    def latency_fn(self) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Return jnp fn: knob values (n_knobs,) -> (latency_s, vmem_bytes).
+
+        This is the *measurement oracle* (the VTA++-simulator analog).
+        """
+        wl, spec, kind = self.workload, self.spec, self.kind
+
+        if kind == "conv2d":
+            def f(v):
+                return analytical.conv2d_latency(
+                    wl, v[0], v[5], v[6], v[1], v[2], v[3], v[4], spec=spec)
+        elif kind == "matmul":
+            def f(v):
+                return analytical.gemm_latency(
+                    wl["m"], wl["n"], wl["k"],
+                    v[0] * v[5], v[2], v[1], v[3], v[4], spec=spec)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown kind {kind}")
+        return f
+
+    def measure(self, configs: jnp.ndarray) -> jnp.ndarray:
+        """Batched oracle measurement: (n, n_knobs) int -> latency (n,)."""
+        vals = self.values(configs)
+        lat, _ = jax.vmap(self.latency_fn())(vals)
+        return lat
+
+    def fitness(self, configs: jnp.ndarray) -> jnp.ndarray:
+        """f = 1/latency (throughput-style fitness, higher is better)."""
+        return 1.0 / self.measure(configs)
+
+    # ------------------------------------------------------------- features
+    def workload_features(self) -> np.ndarray:
+        """Static normalized log2 features describing the task (len 11)."""
+        wl = self.workload
+        if self.kind == "conv2d":
+            oh, ow, m, n, k = analytical.conv2d_im2col_dims(
+                wl["b"], wl["h"], wl["w"], wl["ci"], wl["co"], wl["kh"],
+                wl["kw"], wl["stride"], wl["pad"])
+            raw = [wl["b"], wl["h"], wl["w"], wl["ci"], wl["co"], wl["kh"],
+                   wl["kw"], wl["stride"], m, n, k]
+        else:
+            m, n, k = wl["m"], wl["n"], wl["k"]
+            raw = [1, 1, 1, k, n, 1, 1, 1, m, n, k]
+        return (np.log2(np.maximum(np.array(raw, np.float32), 1.0)) / 16.0)
+
+    def feature_vector(self, configs: jnp.ndarray) -> jnp.ndarray:
+        """GBT features: log2 knob values ++ workload features, (..., 18)."""
+        v = jnp.log2(jnp.maximum(self.values(configs), 1.0)) / 16.0
+        wf = jnp.broadcast_to(jnp.asarray(self.workload_features()),
+                              (*configs.shape[:-1], 11))
+        return jnp.concatenate([v, wf], axis=-1)
+
+
+def reward_with_penalty(latency: jnp.ndarray, vmem: jnp.ndarray,
+                        spec: TpuSpec = DEFAULT,
+                        lam: float = 1e-7) -> jnp.ndarray:
+    """Eq. 5: R = 1/exec_time - P(theta), with Eq. 4 hinge penalties.
+
+    ``area`` maps to VMEM footprint (on-chip resource), ``memory`` to HBM.
+    Latency is clamped so infeasible (inf) measurements give ~0 base reward.
+    """
+    base = 1.0 / jnp.maximum(latency, 1e-9)
+    pen = lam * (jnp.maximum(vmem - spec.vmem_bytes, 0.0))
+    return base - pen

@@ -1,0 +1,218 @@
+"""MAPPO (Multi-Agent PPO) with Centralized Training / Decentralized Execution.
+
+Implements §2.2 of the paper:
+  Eq. 1  centralized critic regression to estimated returns
+  Eq. 2  Generalized Advantage Estimation
+  Eq. 3  per-agent PPO-clip policy objective
+
+The environment is the knob-adjustment process over a ``DesignSpace``:
+vectorized across ``n_envs`` parallel configurations, with the *surrogate*
+reward supplied by the GBT cost model (the paper uses the cost model as the
+stand-in for hardware measurements during exploration; real measurements only
+happen on the Confidence-Sampled subset).
+
+Everything — rollout, GAE, PPO epochs — is one jitted function whose shapes
+are independent of the tuning task, so a single compilation serves all ~100
+conv tasks in an end-to-end network tuning run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agents as A
+from repro.core import cost_model as CM
+from repro.core.design_space import AGENT_KNOBS, AGENTS, DesignSpace, N_KNOBS
+from repro.hw.tpu_spec import DEFAULT
+from repro.optim.adam import Adam
+
+
+class EnvParams(NamedTuple):
+    """Task description as jnp arrays — shape-stable across tasks."""
+    choice_table: jnp.ndarray  # (N_KNOBS, MAX_CHOICES) float32
+    n_choices: jnp.ndarray     # (N_KNOBS,) int32
+    wfeat: jnp.ndarray         # (N_WFEAT,) float32
+    khkw: jnp.ndarray          # () float32 — kernel window area (K-tile factor)
+    vmem_limit: jnp.ndarray    # () float32
+    penalty_lam: jnp.ndarray   # () float32
+
+
+def env_params_from_space(space: DesignSpace, lam: float = 1e-7) -> EnvParams:
+    wl = space.workload
+    khkw = float(wl.get("kh", 1) * wl.get("kw", 1))
+    return EnvParams(
+        choice_table=space.choice_table(),
+        n_choices=jnp.asarray(space.n_choices),
+        wfeat=jnp.asarray(space.workload_features()),
+        khkw=jnp.asarray(khkw, jnp.float32),
+        vmem_limit=jnp.asarray(float(space.spec.vmem_bytes), jnp.float32),
+        penalty_lam=jnp.asarray(lam, jnp.float32),
+    )
+
+
+def config_values(env: EnvParams, config: jnp.ndarray) -> jnp.ndarray:
+    return env.choice_table[jnp.arange(N_KNOBS), config]
+
+
+def config_features(env: EnvParams, config: jnp.ndarray) -> jnp.ndarray:
+    """GBT features: log2 knob values ++ workload features, (..., 18)."""
+    v = jnp.log2(jnp.maximum(config_values(env, config), 1.0)) / 16.0
+    wf = jnp.broadcast_to(env.wfeat, (*config.shape[:-1], A.N_WFEAT))
+    return jnp.concatenate([v, wf], axis=-1)
+
+
+def vmem_estimate(env: EnvParams, config: jnp.ndarray) -> jnp.ndarray:
+    """Analytical VMEM footprint (the ``area(theta)`` analog of Eq. 4)."""
+    v = config_values(env, config)
+    tm = jnp.ceil(v[..., 0] * v[..., 5] * v[..., 6] / 8.0) * 8.0
+    tk = jnp.ceil(v[..., 1] * env.khkw / 128.0) * 128.0
+    tn = jnp.ceil(v[..., 2] / 128.0) * 128.0
+    threads = jnp.maximum(v[..., 3] * v[..., 4], 1.0)
+    return threads * (tm * tk + tk * tn) * 2.0 + tm * tn * 4.0
+
+
+def surrogate_reward(env: EnvParams, forest: CM.Forest,
+                     config: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 with the cost model as the execution-time surrogate.
+
+    The GBT is trained on y = -log(latency), so its prediction is already a
+    "higher is better" fitness; the VMEM hinge penalty (Eq. 4) is analytic.
+    """
+    pred = CM.predict(forest, config_features(env, config))
+    pen = env.penalty_lam * jnp.maximum(
+        vmem_estimate(env, config) - env.vmem_limit, 0.0)
+    return pred - pen
+
+
+@dataclasses.dataclass(frozen=True)
+class MappoConfig:
+    n_steps: int = 64          # step_rl (paper: 500)
+    n_envs: int = 16           # parallel configurations per episode
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip: float = 0.2
+    lr: float = 7e-4
+    vf_coef: float = 1.0
+    ent_coef: float = 0.01
+    epochs: int = 4
+
+
+class Trajectory(NamedTuple):
+    obs: Dict[str, jnp.ndarray]      # per agent: (T, E, obs_dim)
+    actions: Dict[str, jnp.ndarray]  # per agent: (T, E)
+    logps: Dict[str, jnp.ndarray]    # per agent: (T, E)
+    states: jnp.ndarray              # (T, E, STATE_DIM)
+    values: jnp.ndarray              # (T, E)
+    rewards: jnp.ndarray             # (T, E)
+    configs: jnp.ndarray             # (T, E, N_KNOBS) — visited configs
+    last_value: jnp.ndarray          # (E,)
+
+
+def rollout(params, rng, env: EnvParams, forest: CM.Forest,
+            config0: jnp.ndarray, hp: MappoConfig) -> Trajectory:
+    def step(carry, rng_t):
+        config = carry
+        rngs = jax.random.split(rng_t, len(AGENTS))
+        obs, acts, logps = {}, {}, {}
+        for i, agent in enumerate(AGENTS):
+            o = A.local_obs(agent, config, env.n_choices, env.wfeat)
+            logits = A.policy_logits(params[agent], o)
+            a = jax.random.categorical(rngs[i], logits, axis=-1)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            obs[agent] = o
+            acts[agent] = a
+            logps[agent] = jnp.take_along_axis(lp, a[..., None], -1)[..., 0]
+        state = A.global_state(config, env.n_choices, env.wfeat)
+        value = A.critic_value(params["critic"], state)
+        deltas = A.combined_deltas(acts)
+        new_config = jnp.clip(config + deltas, 0, env.n_choices - 1)
+        reward = surrogate_reward(env, forest, new_config)
+        out = (obs, acts, logps, state, value, reward, new_config)
+        return new_config, out
+
+    rngs = jax.random.split(rng, hp.n_steps)
+    last_config, (obs, acts, logps, states, values, rewards, configs) = \
+        jax.lax.scan(step, config0, rngs)
+    last_state = A.global_state(last_config, env.n_choices, env.wfeat)
+    last_value = A.critic_value(params["critic"], last_state)
+    return Trajectory(obs, acts, logps, states, values, rewards, configs,
+                      last_value)
+
+
+def gae(rewards: jnp.ndarray, values: jnp.ndarray, last_value: jnp.ndarray,
+        gamma: float, lam: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 2 — reverse-scan GAE. Returns (advantages, returns)."""
+    values_tp1 = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    deltas = rewards + gamma * values_tp1 - values
+
+    def back(carry, delta):
+        adv = delta + gamma * lam * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(back, jnp.zeros_like(last_value), deltas,
+                           reverse=True)
+    return advs, advs + values
+
+
+def ppo_loss(params, traj: Trajectory, advs, returns, hp: MappoConfig):
+    adv_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+    total_pg, total_ent = 0.0, 0.0
+    for agent in AGENTS:
+        logits = A.policy_logits(params[agent], traj.obs[agent])
+        lp_all = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(lp_all, traj.actions[agent][..., None],
+                                 -1)[..., 0]
+        ratio = jnp.exp(lp - traj.logps[agent])
+        # Eq. 3 — clipped surrogate
+        pg = jnp.minimum(ratio * adv_n,
+                         jnp.clip(ratio, 1 - hp.clip, 1 + hp.clip) * adv_n)
+        total_pg = total_pg + pg.mean()
+        ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1).mean()
+        total_ent = total_ent + ent
+    v = A.critic_value(params["critic"], traj.states)
+    vloss = jnp.mean(jnp.square(v - returns))  # Eq. 1
+    loss = -total_pg + hp.vf_coef * vloss - hp.ent_coef * total_ent
+    return loss, {"pg": total_pg, "vloss": vloss, "entropy": total_ent}
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def train_episode(params, opt_state, rng, env: EnvParams, forest: CM.Forest,
+                  hp: MappoConfig):
+    """One episode: init a set of configurations, rollout, PPO update.
+
+    Returns (params, opt_state, visited_configs (T*E, N_KNOBS), stats).
+    """
+    r_init, r_roll = jax.random.split(rng)
+    u = jax.random.uniform(r_init, (hp.n_envs, N_KNOBS))
+    config0 = (u * env.n_choices).astype(jnp.int32)
+
+    traj = rollout(params, r_roll, env, forest, config0, hp)
+    advs, returns = gae(traj.rewards, traj.values, traj.last_value,
+                        hp.gamma, hp.gae_lambda)
+
+    opt = Adam(lr=hp.lr, grad_clip_norm=1.0)
+    stats = {}
+    for _ in range(hp.epochs):
+        (loss, stats), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+            params, traj, advs, returns, hp)
+        params, opt_state = opt.update(grads, opt_state, params)
+    visited = traj.configs.reshape(-1, N_KNOBS)
+    stats = dict(stats, loss=loss, mean_reward=traj.rewards.mean())
+    return params, opt_state, visited, stats
+
+
+def init_state(rng, hp: MappoConfig):
+    params = A.init_marl_params(rng)
+    opt = Adam(lr=hp.lr, grad_clip_norm=1.0)
+    return params, opt.init(params)
+
+
+def critic_scores(params, env: EnvParams, configs: jnp.ndarray) -> jnp.ndarray:
+    """Value-network predictions for a set of configs (used by CS)."""
+    state = A.global_state(configs, env.n_choices, env.wfeat)
+    return A.critic_value(params["critic"], state)

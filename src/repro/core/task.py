@@ -1,0 +1,61 @@
+"""Tuning-task extraction — the compiler front half.
+
+Walks a model definition, emits one ``DesignSpace`` per convolution layer
+(deduplicated by workload shape, with layer multiplicity retained so network
+latency sums correctly), mirroring how TVM extracts tuning tasks per op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.design_space import DesignSpace
+from repro.hw.tpu_spec import DEFAULT, TpuSpec
+from repro.models import cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    name: str               # representative layer name
+    space: DesignSpace
+    multiplicity: int       # how many layers share this workload
+    layer_names: Tuple[str, ...]
+
+
+def conv_tasks(model: str, batch: int = 1,
+               spec: TpuSpec = DEFAULT) -> List[Task]:
+    """Unique conv tuning tasks for a network (counts match Table 3 before
+    dedup; dedup only merges *identical* workloads, as AutoTVM does)."""
+    specs = cnn.conv_specs(model)
+    groups: Dict[Tuple, List[str]] = {}
+    order: List[Tuple] = []
+    for s in specs:
+        key = tuple(sorted(s.workload(batch).items()))
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(s.name)
+    tasks = []
+    for key in order:
+        wl = dict(key)
+        names = groups[key]
+        tasks.append(Task(
+            name=f"{model}:{names[0]}",
+            space=DesignSpace.for_conv2d(wl, spec),
+            multiplicity=len(names),
+            layer_names=tuple(names),
+        ))
+    return tasks
+
+
+def total_conv_layers(model: str) -> int:
+    return len(cnn.conv_specs(model))
+
+
+def network_latency(tasks: List[Task], best_latency: Dict[str, float]) -> float:
+    """Sum of per-layer latencies given per-task best results (seconds)."""
+    return sum(best_latency[t.name] * t.multiplicity for t in tasks)
+
+
+def network_flops(model: str, batch: int = 1) -> float:
+    return sum(s.flops(batch) for s in cnn.conv_specs(model))

@@ -1,0 +1,181 @@
+"""ARCO tuning loop — Fig. 2 / Algorithm 1 of the paper.
+
+Per tuning task (one conv layer / one GEMM):
+
+  repeat iteration_opt times:
+    MARL exploration episodes (MAPPO, CTDE) against the GBT surrogate
+    Confidence Sampling picks <= b_measure high-confidence configs
+    the measurement oracle (analytical TPU simulator) evaluates them
+    the GBT cost model is refit on all measurements
+
+Total measurement budget matches the paper's setup:
+iteration_opt * b_measure ~ Sigma(b_GBT) = 1000 hardware measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import confidence_sampling as CS
+from repro.core import mappo
+from repro.core.cost_model import GBTModel
+from repro.core.design_space import DesignSpace, N_KNOBS
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerConfig:
+    iteration_opt: int = 16        # Table 4
+    b_measure: int = 64            # bGBT — measurements per iteration
+    episodes_per_iter: int = 8     # episode_rl / iteration_opt
+    mappo: mappo.MappoConfig = mappo.MappoConfig()
+    gbt_rounds: int = 40
+    seed: int = 0
+
+    @staticmethod
+    def paper() -> "TunerConfig":
+        """Full Table-4 hyper-parameters (episode_rl=128, step_rl=500)."""
+        return TunerConfig(iteration_opt=16, b_measure=64,
+                           episodes_per_iter=8,
+                           mappo=mappo.MappoConfig(n_steps=500, n_envs=16))
+
+    @staticmethod
+    def fast() -> "TunerConfig":
+        """Scaled-down budget for CPU tests / CI."""
+        return TunerConfig(iteration_opt=4, b_measure=16,
+                           episodes_per_iter=2,
+                           mappo=mappo.MappoConfig(n_steps=24, n_envs=8),
+                           gbt_rounds=16)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    best_config: np.ndarray
+    best_latency: float
+    n_measurements: int
+    wall_time_s: float
+    # history rows: (measurement_count, best_latency_so_far, wall_time)
+    history: List[Tuple[int, float, float]]
+    # every measurement in order: (measurement_index, latency)
+    measurements: List[Tuple[int, float]]
+
+    def best_gflops(self, space: DesignSpace) -> float:
+        from repro.hw import analytical
+        if space.kind == "conv2d":
+            return analytical.conv2d_gflops(space.workload, self.best_latency)
+        m, n, k = (space.workload[d] for d in "mnk")
+        return 2.0 * m * n * k / self.best_latency / 1e9
+
+
+def _measure(space: DesignSpace, configs: np.ndarray
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Oracle measurement + GBT feature extraction."""
+    c = jnp.asarray(configs, jnp.int32)
+    lat = np.asarray(space.measure(c))
+    feats = np.asarray(space.feature_vector(c))
+    return lat, feats
+
+
+class _Tracker:
+    """Shared bookkeeping for every tuner (ARCO + baselines)."""
+
+    def __init__(self):
+        self.t0 = time.perf_counter()
+        self.best_lat = np.inf
+        self.best_cfg: Optional[np.ndarray] = None
+        self.count = 0
+        self.history: List[Tuple[int, float, float]] = []
+        self.measurements: List[Tuple[int, float]] = []
+
+    def record(self, configs: np.ndarray, lats: np.ndarray):
+        for cfg, lat in zip(configs, lats):
+            self.count += 1
+            self.measurements.append((self.count, float(lat)))
+            if lat < self.best_lat:
+                self.best_lat = float(lat)
+                self.best_cfg = np.asarray(cfg)
+        self.history.append((self.count, self.best_lat,
+                             time.perf_counter() - self.t0))
+
+    def result(self) -> TuneResult:
+        return TuneResult(self.best_cfg, self.best_lat, self.count,
+                          time.perf_counter() - self.t0, self.history,
+                          self.measurements)
+
+
+def arco_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+              budget: Optional[int] = None,
+              use_cs: bool = True) -> TuneResult:
+    """Tune one task with ARCO. ``budget`` caps total oracle measurements.
+
+    ``use_cs=False`` ablates Confidence Sampling (Fig. 4a): candidates are
+    drawn uniformly from the explored pool instead."""
+    rng = jax.random.PRNGKey(cfg.seed)
+    np_rng = np.random.default_rng(cfg.seed)
+    env = mappo.env_params_from_space(space)
+    params, opt_state = mappo.init_state(rng, cfg.mappo)
+    gbt = GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+    track = _Tracker()
+    budget = budget or cfg.iteration_opt * cfg.b_measure
+
+    # Iteration 0 seeds the cost model with random measurements (all methods
+    # do this — an untrained surrogate carries no signal).
+    seed_cfgs = np.asarray(space.random_configs(rng, cfg.b_measure))
+    seed_cfgs = np.unique(seed_cfgs, axis=0)
+    lat, feats = _measure(space, seed_cfgs)
+    track.record(seed_cfgs, lat)
+    gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+
+    measured = {tuple(c) for c in seed_cfgs}
+    it = 0
+    while track.count < budget:
+        it += 1
+        forest = gbt.to_forest()
+        pool: List[np.ndarray] = []
+        for ep in range(cfg.episodes_per_iter):
+            rng, r_ep = jax.random.split(rng)
+            params, opt_state, visited, stats = mappo.train_episode(
+                params, opt_state, r_ep, env, forest, cfg.mappo)
+            pool.append(np.asarray(visited))
+        pool_np = np.unique(np.concatenate(pool), axis=0)
+
+        # Confidence Sampling over the explored pool (critic-scored)
+        scores = np.asarray(mappo.critic_scores(
+            params, env, jnp.asarray(pool_np, jnp.int32)))
+        n_meas = min(cfg.b_measure, budget - track.count)
+        if use_cs:
+            cand = CS.confidence_sampling(pool_np, scores, n_meas,
+                                          space.n_choices, seed=cfg.seed + it)
+        else:  # ablation: uniform sampling from the explored pool (Fig. 4a)
+            idx = np_rng.choice(len(pool_np), min(n_meas, len(pool_np)),
+                                replace=False)
+            cand = pool_np[idx]
+        # drop configs already measured; top up from the remaining pool
+        cand_list = [c for c in cand if tuple(c) not in measured]
+        if len(cand_list) < n_meas:
+            seen = {tuple(c) for c in cand_list}
+            for c in pool_np[np.argsort(-scores)]:
+                if tuple(c) not in measured and tuple(c) not in seen:
+                    seen.add(tuple(c))
+                    cand_list.append(c)
+                if len(cand_list) >= n_meas:
+                    break
+        if not cand_list:  # search space exhausted
+            break
+        cand = np.asarray(cand_list[:n_meas], np.int64).reshape(-1, N_KNOBS)
+
+        lat, feats = _measure(space, cand)
+        track.record(cand, lat)
+        measured.update(tuple(c) for c in cand)
+        gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+    return track.result()
+
+
+def tune_network(tasks: Dict[str, DesignSpace],
+                 tuner=arco_tune, **kw) -> Dict[str, TuneResult]:
+    """Tune every (deduplicated) task of a network; returns per-task results."""
+    return {name: tuner(space, **kw) for name, space in tasks.items()}

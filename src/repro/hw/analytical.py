@@ -1,0 +1,170 @@
+"""Analytical TPU latency oracle — the VTA++-simulator analog.
+
+The paper measures candidate configurations on the VTA++ *simulator*; here the
+measurement oracle is a deterministic roofline model of a blocked GEMM running
+on a TPU v5e core.  It is written in pure jnp over knob *values* so the entire
+MARL exploration loop (thousands of candidate evaluations per step) jits and
+vectorizes.
+
+Model (classic blocked-GEMM cost with TPU specifics):
+
+  padded compute   ceil-padded tile dims -> MXU passes (128-aligned)
+  HBM traffic      A: M*K * n_blocks_N  (A reloaded per N block)
+                   B: K*N * n_blocks_M  (B reloaded per M block)
+                   C: M*N write (+ k-split accumulation read-modify-write)
+  overlap          "threading" (the VTA virtual-thread analog) overlaps DMA
+                   with compute: latency = max(comp, mem) when threaded,
+                   comp + mem when single-threaded; serial grid overhead is
+                   divided by the thread count.
+  VMEM             working set = threads * (A_tile + B_tile) + C_tile(fp32);
+                   configurations that overflow VMEM are INFEASIBLE (inf).
+
+Feasibility mirrors real hardware, where an oversized tiling fails to compile.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.hw.tpu_spec import DEFAULT, TpuSpec
+
+BF16 = 2.0
+F32 = 4.0
+_INF = 1e12  # "measurement failed" latency sentinel (seconds)
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def _pad_to(x, g):
+    return _ceil_div(x, g) * g
+
+
+def gemm_latency(
+    m, n, k,
+    tile_m, tile_n, tile_k,
+    threads_m, threads_n,
+    spec: TpuSpec = DEFAULT,
+    extra_in_bytes=0.0,
+):
+    """Latency (s) of an (m,k)x(k,n) bf16 GEMM blocked as (tile_m,tile_n,tile_k).
+
+    All arguments may be python ints or jnp arrays (broadcastable); the result
+    is a jnp array so the function can be vmapped over candidate populations.
+    ``extra_in_bytes`` charges additional input traffic (e.g. im2col overlap).
+    """
+    m = jnp.asarray(m, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    tm = jnp.minimum(jnp.asarray(tile_m, jnp.float32), m)
+    tn = jnp.minimum(jnp.asarray(tile_n, jnp.float32), n)
+    tk = jnp.minimum(jnp.asarray(tile_k, jnp.float32), k)
+    thm = jnp.asarray(threads_m, jnp.float32)
+    thn = jnp.asarray(threads_n, jnp.float32)
+
+    gm = jnp.ceil(m / tm)
+    gn = jnp.ceil(n / tn)
+    gk = jnp.ceil(k / tk)
+
+    # --- compute: MXU passes run on 128-padded tile dims (8-sublane minor-2) ---
+    tm_pad = jnp.ceil(tm / 8.0) * 8.0
+    tn_pad = jnp.ceil(tn / 128.0) * 128.0
+    tk_pad = jnp.ceil(tk / 128.0) * 128.0
+    flops_padded = 2.0 * (gm * tm_pad) * (gn * tn_pad) * (gk * tk_pad)
+    t_comp = flops_padded / spec.peak_bf16_flops
+
+    # --- HBM traffic of the blocked loop nest ---
+    bytes_a = m * k * BF16 * gn          # A streamed once per N block column
+    bytes_b = k * n * BF16 * gm          # B streamed once per M block row
+    bytes_c = m * n * BF16               # final write
+    traffic = bytes_a + bytes_b + bytes_c + jnp.asarray(extra_in_bytes, jnp.float32)
+    t_mem = traffic / spec.hbm_bw
+
+    # --- serial overheads: grid sequencing + DMA issue, amortized by threading ---
+    grid_steps = gm * gn * gk
+    threads = jnp.maximum(thm * thn, 1.0)
+    t_overhead = (grid_steps * spec.grid_step_overhead_s
+                  + grid_steps * 3.0 * spec.dma_latency_s) / threads
+
+    # --- overlap: threaded => double-buffered DMA hides behind compute ---
+    overlapped = jnp.maximum(t_comp, t_mem)
+    serial = t_comp + t_mem
+    t_core = jnp.where(threads >= 2.0, overlapped, serial)
+
+    latency = t_core + t_overhead
+
+    # --- VMEM feasibility: threads x (A+B tiles, bf16) + accumulator (fp32) ---
+    vmem = (threads * (tm_pad * tk_pad + tk_pad * tn_pad) * BF16
+            + tm_pad * tn_pad * F32)
+    feasible = vmem <= spec.vmem_bytes
+    return jnp.where(feasible, latency, _INF), vmem
+
+
+def conv2d_im2col_dims(b, h, w, ci, co, kh, kw, stride, pad):
+    """Output dims + GEMM dims for a conv lowered via im2col (python ints)."""
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    m = b * oh * ow
+    k = ci * kh * kw
+    n = co
+    return oh, ow, m, n, k
+
+
+def conv2d_latency(
+    workload,  # dict of python ints: b,h,w,ci,co,kh,kw,stride,pad
+    tile_b, tile_h, tile_w, tile_ci, tile_co,
+    h_threading, oc_threading,
+    spec: TpuSpec = DEFAULT,
+):
+    """Latency of a conv2d executed as a blocked im2col GEMM.
+
+    The mapping-agent knobs (tile_h, tile_w) + hardware tile_b compose the GEMM
+    M-tile; tile_ci (x kh*kw) is the K-tile; tile_co the N-tile — the direct
+    analog of VTA's BATCH/BLOCK_IN/BLOCK_OUT GEMM-core geometry.
+    """
+    b, h, w = workload["b"], workload["h"], workload["w"]
+    ci, co = workload["ci"], workload["co"]
+    kh, kw = workload["kh"], workload["kw"]
+    stride, pad = workload["stride"], workload["pad"]
+    oh, ow, m, n, k = conv2d_im2col_dims(b, h, w, ci, co, kh, kw, stride, pad)
+
+    tile_m = (jnp.asarray(tile_b, jnp.float32)
+              * jnp.asarray(tile_h, jnp.float32)
+              * jnp.asarray(tile_w, jnp.float32))
+    tile_k = jnp.asarray(tile_ci, jnp.float32) * float(kh * kw)
+    tile_n = jnp.asarray(tile_co, jnp.float32)
+
+    # im2col re-reads overlapping input windows: charge the expansion ratio
+    # (kh*kw / stride^2 capped at kh*kw) on the input tensor once.
+    expand = min(float(kh * kw) / float(stride * stride), float(kh * kw))
+    extra = float(b * h * w * ci) * BF16 * max(expand - 1.0, 0.0)
+
+    lat, vmem = gemm_latency(
+        m, n, k, tile_m, tile_n, tile_k,
+        h_threading, oc_threading, spec=spec, extra_in_bytes=extra,
+    )
+    return lat, vmem
+
+
+def conv2d_gflops(workload, latency_s):
+    """Achieved GFLOP/s of a conv at a given latency (Fig. 7 metric)."""
+    _, _, m, n, k = conv2d_im2col_dims(
+        workload["b"], workload["h"], workload["w"], workload["ci"],
+        workload["co"], workload["kh"], workload["kw"], workload["stride"],
+        workload["pad"])
+    return 2.0 * m * n * k / latency_s / 1e9
+
+
+def conv2d_min_latency(workload, spec: TpuSpec = DEFAULT) -> float:
+    """Roofline lower bound for a conv (perfect tiling): max(comp, mem)."""
+    _, _, m, n, k = conv2d_im2col_dims(
+        workload["b"], workload["h"], workload["w"], workload["ci"],
+        workload["co"], workload["kh"], workload["kw"], workload["stride"],
+        workload["pad"])
+    flops = 2.0 * m * n * k
+    bytes_min = (m * k + k * n + m * n) * BF16
+    return max(flops / spec.peak_bf16_flops, bytes_min / spec.hbm_bw)

@@ -1,0 +1,169 @@
+"""Trip-count-aware analysis of partitioned HLO text.
+
+XLA's ``cost_analysis()`` visits every while-loop body exactly once, so any
+rolled construct (``lax.scan`` over layers, KV chunks, loss chunks...) is
+undercounted by its trip count.  This module parses the *scheduled* HLO,
+builds the computation call graph with ``known_trip_count`` weights, and
+produces execution-weighted totals:
+
+  * dot FLOPs (2 * numel(result) * contraction), per-device;
+  * collective bytes by op kind, per-device, with ring-algorithm wire
+    multipliers (all-reduce 2x);
+
+These are the compute / collective roofline inputs in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count..\{?"?n"?.?[:=]."?(\d+)')
+_REF = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)="
+                  r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_DOT = re.compile(r"\bdot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)"
+                  r".*?lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL = re.compile(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                   r"collective-permute)(?:-start)?\(")
+
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    entry: bool
+    lines: List[str]
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.split("\n"):
+        if line and not line[0].isspace():
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)), [])
+                comps[cur.name] = cur
+                continue
+            cur = None
+        elif cur is not None:
+            cur.lines.append(line)
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution-count multiplier per computation (entry = 1)."""
+    edges: List[Tuple[str, str, float]] = []  # (caller, callee, weight)
+    for c in comps.values():
+        for line in c.lines:
+            w = 1.0
+            wm = _WHILE.search(line)
+            if wm:
+                tm = _TRIP.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                edges.append((c.name, wm.group(2), trip))
+                edges.append((c.name, wm.group(1), trip + 1.0))
+                continue
+            rm = _REF.search(line)
+            if rm:
+                for callee in re.split(r",\s*", rm.group(1)):
+                    edges.append((c.name, callee.lstrip("%"), 1.0))
+    mult = {name: (1.0 if c.entry else 0.0) for name, c in comps.items()}
+    for _ in range(64):  # propagate through the (acyclic) call graph
+        new = {name: (1.0 if comps[name].entry else 0.0) for name in comps}
+        for caller, callee, w in edges:
+            if callee in new and caller in mult:
+                new[callee] += mult[caller] * w
+        if all(abs(new[k] - mult[k]) < 1e-9 for k in mult):
+            break
+        mult = new
+    return mult
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+
+    flops = 0.0
+    coll_bytes: Dict[str, float] = {}
+    coll_counts: Dict[str, float] = {}
+
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        # instruction shape table for operand lookup
+        shapes: Dict[str, Tuple[str, List[int]]] = {}
+        for line in c.lines:
+            im = _INSTR.match(line)
+            if im:
+                sh = _first_shape(im.group(2))
+                if sh:
+                    shapes[im.group(1)] = sh
+        for line in c.lines:
+            im = _INSTR.match(line)
+            if not im:
+                continue
+            name, rhs = im.groups()
+            dm = _DOT.search(rhs)
+            if dm and " dot(" in rhs:
+                res = _first_shape(rhs)
+                lhs = shapes.get(dm.group(1))
+                if res and lhs:
+                    rnum = 1
+                    for d in res[1]:
+                        rnum *= d
+                    k = 1
+                    for ci in (dm.group(3).split(",") if dm.group(3)
+                               else []):
+                        di = int(ci)
+                        if di < len(lhs[1]):
+                            k *= lhs[1][di]
+                    flops += m * 2.0 * rnum * k
+            cm = _COLL.search(rhs)
+            if cm:
+                op = cm.group(1)
+                # result shapes only (left side of the op call)
+                b = _all_shapes_bytes(rhs.split(op)[0])
+                coll_bytes[op] = coll_bytes.get(op, 0.0) + m * b
+                coll_counts[op] = coll_counts.get(op, 0.0) + m
+
+    wire = sum(_WIRE_MULT[op] * b for op, b in coll_bytes.items())
+    return {
+        "weighted_dot_flops": flops,
+        "collective_bytes_by_op": coll_bytes,
+        "collective_counts": coll_counts,
+        "wire_bytes_per_device": wire,
+        "n_computations": len(comps),
+    }

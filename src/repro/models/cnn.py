@@ -1,0 +1,192 @@
+"""The paper's evaluation networks: AlexNet, VGG-11/13/16/19, ResNet-18/34.
+
+Two uses:
+  1. ``conv_specs(name)`` — the per-layer conv workloads ARCO tunes.  The
+     layer counts reproduce Table 3 exactly (AlexNet 5, VGG-11 8, VGG-13 10,
+     VGG-16 13, VGG-19 16, ResNet-18 17, ResNet-34 33 convolution tasks;
+     ResNet downsample 1x1 projections are part of the blocks but, as in the
+     paper's task extraction, only the main-path convs count).
+  2. ``init_params`` / ``apply`` — a runnable NHWC JAX forward pass whose conv
+     layers execute through the tunable Pallas GEMM core (``kernels.ops``),
+     so a tuned configuration is actually *deployable* on the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.gemm import GemmConfig
+
+MODELS = ("alexnet", "vgg-11", "vgg-13", "vgg-16", "vgg-19",
+          "resnet-18", "resnet-34")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    h: int
+    w: int
+    ci: int
+    co: int
+    kh: int
+    kw: int
+    stride: int
+    pad: int
+
+    def workload(self, batch: int = 1) -> Dict[str, int]:
+        return dict(b=batch, h=self.h, w=self.w, ci=self.ci, co=self.co,
+                    kh=self.kh, kw=self.kw, stride=self.stride, pad=self.pad)
+
+    def out_hw(self) -> Tuple[int, int]:
+        oh = (self.h + 2 * self.pad - self.kh) // self.stride + 1
+        ow = (self.w + 2 * self.pad - self.kw) // self.stride + 1
+        return oh, ow
+
+    def flops(self, batch: int = 1) -> float:
+        oh, ow = self.out_hw()
+        return 2.0 * batch * oh * ow * self.co * self.ci * self.kh * self.kw
+
+
+_VGG_STAGES = {
+    "vgg-11": (1, 1, 2, 2, 2),
+    "vgg-13": (2, 2, 2, 2, 2),
+    "vgg-16": (2, 2, 3, 3, 3),
+    "vgg-19": (2, 2, 4, 4, 4),
+}
+_VGG_CH = (64, 128, 256, 512, 512)
+
+_RESNET_BLOCKS = {"resnet-18": (2, 2, 2, 2), "resnet-34": (3, 4, 6, 3)}
+_RESNET_CH = (64, 128, 256, 512)
+
+
+def conv_specs(model: str) -> List[ConvSpec]:
+    model = model.lower()
+    specs: List[ConvSpec] = []
+    if model == "alexnet":
+        specs = [
+            ConvSpec("conv1", 224, 224, 3, 64, 11, 11, 4, 2),
+            ConvSpec("conv2", 27, 27, 64, 192, 5, 5, 1, 2),
+            ConvSpec("conv3", 13, 13, 192, 384, 3, 3, 1, 1),
+            ConvSpec("conv4", 13, 13, 384, 256, 3, 3, 1, 1),
+            ConvSpec("conv5", 13, 13, 256, 256, 3, 3, 1, 1),
+        ]
+    elif model in _VGG_STAGES:
+        h, ci = 224, 3
+        i = 0
+        for stage, (reps, co) in enumerate(zip(_VGG_STAGES[model], _VGG_CH)):
+            for r in range(reps):
+                i += 1
+                specs.append(ConvSpec(f"conv{i}", h, h, ci, co, 3, 3, 1, 1))
+                ci = co
+            h //= 2  # maxpool 2x2/2 after each stage
+    elif model in _RESNET_BLOCKS:
+        specs.append(ConvSpec("conv1", 224, 224, 3, 64, 7, 7, 2, 3))
+        h, ci = 56, 64  # after maxpool 3x3/2
+        i = 1
+        for stage, (reps, co) in enumerate(zip(_RESNET_BLOCKS[model],
+                                               _RESNET_CH)):
+            for r in range(reps):
+                stride = 2 if (stage > 0 and r == 0) else 1
+                i += 1
+                specs.append(ConvSpec(f"conv{i}a", h, h, ci, co, 3, 3,
+                                      stride, 1))
+                h_out = h // stride
+                i_b = f"conv{i}b"
+                specs.append(ConvSpec(i_b, h_out, h_out, co, co, 3, 3, 1, 1))
+                ci, h = co, h_out
+    else:
+        raise ValueError(f"unknown model {model!r}; one of {MODELS}")
+    return specs
+
+
+def expected_task_count(model: str) -> int:
+    """Table 3 'Number of Convolution Tasks'."""
+    return {"alexnet": 5, "vgg-11": 8, "vgg-13": 10, "vgg-16": 13,
+            "vgg-19": 16, "resnet-18": 17, "resnet-34": 33}[model.lower()]
+
+
+# --------------------------------------------------------------------------
+# Runnable forward pass (NHWC), conv layers via the tunable GEMM core
+# --------------------------------------------------------------------------
+
+def _conv_init(rng, spec: ConvSpec):
+    fan_in = spec.kh * spec.kw * spec.ci
+    w = jax.random.normal(rng, (spec.kh, spec.kw, spec.ci, spec.co),
+                          jnp.float32) * np.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((spec.co,), jnp.float32)}
+
+
+def init_params(rng, model: str, num_classes: int = 1000,
+                input_hw: int = 224) -> Dict:
+    specs = conv_specs(model)
+    rngs = jax.random.split(rng, len(specs) + 1)
+    params = {"convs": [_conv_init(r, s) for r, s in zip(rngs, specs)]}
+    # classifier head: global-avg-pool -> linear
+    co = specs[-1].co
+    params["fc"] = {
+        "w": jax.random.normal(rngs[-1], (co, num_classes), jnp.float32)
+             * np.sqrt(1.0 / co),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+    return params
+
+
+def _maxpool(x, k, s, pad=0):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1),
+        [(0, 0), (pad, pad), (pad, pad), (0, 0)])
+
+
+def apply(params: Dict, x: jnp.ndarray, model: str,
+          configs: Optional[List[GemmConfig]] = None,
+          use_pallas: bool = False) -> jnp.ndarray:
+    """Forward pass. ``configs`` optionally supplies a tuned GEMM geometry
+    per conv layer (the output of ARCO tuning)."""
+    model = model.lower()
+    specs = conv_specs(model)
+    configs = configs or [GemmConfig()] * len(specs)
+
+    def conv(i, x, spec):
+        p = params["convs"][i]
+        out = ops.conv2d(x, p["w"], spec.stride, spec.pad, configs[i],
+                         use_pallas)
+        return out + p["b"]
+
+    if model == "alexnet":
+        pool_after = {0, 1, 4}
+        for i, s in enumerate(specs):
+            x = jax.nn.relu(conv(i, x, s))
+            if i in pool_after:
+                x = _maxpool(x, 3, 2)
+    elif model in _VGG_STAGES:
+        i = 0
+        for reps in _VGG_STAGES[model]:
+            for _ in range(reps):
+                x = jax.nn.relu(conv(i, x, specs[i]))
+                i += 1
+            x = _maxpool(x, 2, 2)
+    else:  # resnet
+        x = jax.nn.relu(conv(0, x, specs[0]))
+        x = _maxpool(x, 3, 2, pad=1)
+        i = 1
+        for stage, reps in enumerate(_RESNET_BLOCKS[model]):
+            for r in range(reps):
+                sa, sb = specs[i], specs[i + 1]
+                y = jax.nn.relu(conv(i, x, sa))
+                y = conv(i + 1, y, sb)
+                if x.shape != y.shape:  # downsample skip: strided 1x1 avg
+                    x = jax.lax.reduce_window(
+                        x, 0.0, jax.lax.add, (1, sa.stride, sa.stride, 1),
+                        (1, sa.stride, sa.stride, 1), "VALID") \
+                        / (sa.stride ** 2)
+                    x = jnp.pad(x, ((0, 0), (0, 0), (0, 0),
+                                    (0, y.shape[-1] - x.shape[-1])))
+                x = jax.nn.relu(x + y)
+                i += 2
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer (token-choice top-k router).
+
+Two execution strategies, selected by ``cfg.moe_impl``:
+
+* ``dense``    — every expert computes every token, router probs zero out the
+                 unselected ones.  Exact top-k math, O(E/k) extra FLOPs;
+                 used by reduced smoke tests (tiny E).
+* ``dropping`` — capacity-based dispatch in token groups (the standard GSPMD
+                 MoE): one-hot combine/dispatch einsums sized
+                 (groups, group_tokens, E, capacity).  Expert weights carry
+                 the expert dim so the sharding rules can lay experts across
+                 the ``model`` axis (EP) or shard d_ff instead (TP fallback
+                 when E doesn't divide the axis).
+
+Aux: load-balancing loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _winit, dense, rmsnorm
+
+
+def init_moe(rng, d_model: int, d_ff: int, n_experts: int, dtype) -> Params:
+    rs = jax.random.split(rng, 4)
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "router": _winit(rs[0], (d_model, n_experts), d_model, jnp.float32),
+        "w_gate": _winit(rs[1], (n_experts, d_model, d_ff), d_model, dtype),
+        "w_up": _winit(rs[2], (n_experts, d_model, d_ff), d_model, dtype),
+        "w_down": _winit(rs[3], (n_experts, d_ff, d_model), d_ff, dtype),
+    }
+
+
+def _router(h: jnp.ndarray, p: Params, top_k: int
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (probs (..., E) with only top-k nonzero, idx (..., k), aux)."""
+    logits = jnp.einsum("...d,de->...e", h.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    mask = jax.nn.one_hot(top_i, logits.shape[-1], dtype=probs.dtype)
+    sparse_p = jnp.einsum("...ke,...k->...e", mask, top_p)
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    e = logits.shape[-1]
+    f = jnp.mean(mask.sum(-2).reshape(-1, e), axis=0)  # fraction routed
+    pbar = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(f * pbar)
+    return sparse_p, top_i, aux
+
+
+def moe_dense(x: jnp.ndarray, p: Params, top_k: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = rmsnorm(x, p["ln"])
+    sparse_p, _, aux = _router(h, p, top_k)
+    g = jax.nn.silu(jnp.einsum("...d,edf->...ef", h, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("...d,edf->...ef", h, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("...ef,efd->...ed", g * u, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("...ed,...e->...d", y, sparse_p.astype(x.dtype))
+    return x + out, aux
+
+
+def moe_dropping(x: jnp.ndarray, p: Params, top_k: int,
+                 capacity_factor: float = 1.25,
+                 group_size: int = 2048) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based dispatch (GSPMD MoE). x: (B, S, D)."""
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    h = rmsnorm(x, p["ln"])
+    tokens = h.reshape(-1, d)
+    n = tokens.shape[0]
+    g_sz = min(group_size, n)
+    n_groups = -(-n // g_sz)
+    pad = n_groups * g_sz - n
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    grp = tokens.reshape(n_groups, g_sz, d)
+
+    sparse_p, top_i, aux = _router(grp, p, top_k)          # (G, T, E)
+    cap = max(int(g_sz * top_k / e * capacity_factor), 4)
+
+    # position of each token within its expert's capacity buffer
+    expert_mask = jax.nn.one_hot(top_i, e, dtype=jnp.int32)   # (G,T,k,E)
+    pos_in_expert = (jnp.cumsum(expert_mask.sum(2), axis=1)
+                     - expert_mask.sum(2))                    # (G,T,E)
+    keep = pos_in_expert < cap
+    disp = (jax.nn.one_hot(pos_in_expert, cap, dtype=x.dtype)
+            * (expert_mask.sum(2) * keep)[..., None].astype(x.dtype))
+    # disp: (G, T, E, C) 0/1 dispatch tensor
+    comb = disp * sparse_p[..., None].astype(x.dtype)         # weighted
+
+    xin = jnp.einsum("gtec,gtd->gecd", disp, grp)             # (G,E,C,D)
+    gact = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin,
+                                  p["w_gate"].astype(x.dtype)))
+    uact = jnp.einsum("gecd,edf->gecf", xin, p["w_up"].astype(x.dtype))
+    yout = jnp.einsum("gecf,efd->gecd", gact * uact,
+                      p["w_down"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", comb, yout)            # (G,T,D)
+    out = out.reshape(-1, d)[:n].reshape(b, s, d)
+    return x + out, aux
+
+
+def moe_block(x: jnp.ndarray, p: Params, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe_impl == "dense":
+        return moe_dense(x, p, cfg.moe_top_k)
+    return moe_dropping(x, p, cfg.moe_top_k, cfg.moe_capacity_factor,
+                        cfg.moe_group_size)

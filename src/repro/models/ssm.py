@@ -1,0 +1,405 @@
+"""Sequence-mixing blocks with recurrent state: Mamba, mLSTM, sLSTM.
+
+All three follow the same execution discipline so the 512-device dry-run
+stays small and memory-bounded:
+
+  * training/prefill runs as an outer ``lax.scan`` over sequence *chunks*
+    with the chunk body wrapped in ``jax.checkpoint`` — only chunk-boundary
+    states are saved for backward, never O(S) copies of the matrix state;
+  * within a Mamba chunk the linear recurrence is an ``associative_scan``
+    (parallel); the LSTM variants are stepwise within the chunk (their gates
+    are recurrent by construction);
+  * decode is a single-step state update (O(1) per token — this is why these
+    archs run the 500k-token cell).
+
+State layouts keep the big axis (d_inner / head value dim) last so the
+sharding rules can lay it on the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _winit, dense, rmsnorm
+
+
+# ==========================================================================
+# Mamba (selective SSM)
+# ==========================================================================
+
+def init_mamba(rng, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dtype=jnp.bfloat16) -> Params:
+    di = expand * d_model
+    dt_rank = -(-d_model // 16)
+    rs = jax.random.split(rng, 6)
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "in_proj": _winit(rs[0], (d_model, 2 * di), d_model, dtype),
+        "conv_w": _winit(rs[1], (d_conv, di), d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _winit(rs[2], (di, dt_rank + 2 * d_state), di, dtype),
+        "dt_proj": _winit(rs[3], (dt_rank, di), dt_rank, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, d_state))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _winit(rs[4], (di, d_model), di, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 hist: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over seq. x: (B,S,di), w: (K,di).
+
+    ``hist``: (B, K-1, di) trailing context from a previous segment (decode
+    continuation); zeros when starting fresh.
+    """
+    k = w.shape[0]
+    if hist is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _mamba_ssm_params(x: jnp.ndarray, p: Params, d_state: int):
+    """delta (B,S,di), B/C (B,S,N) from the conv output."""
+    dt_rank = p["dt_proj"].shape[0]
+    dbl = dense(x, p["x_proj"])
+    dt, bmat, cmat = jnp.split(dbl, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(dense(dt, p["dt_proj"])
+                            + p["dt_bias"].astype(x.dtype))
+    return delta, bmat, cmat
+
+
+def _mamba_chunk(h0, delta, bmat, cmat, x, A):
+    """One chunk of the selective scan (parallel via associative_scan).
+
+    h0: (B, di, N); delta/x: (B, C, di); bmat/cmat: (B, C, N); A: (di, N).
+    Returns (h_last, y (B, C, di)).
+    """
+    df = delta.astype(jnp.float32)
+    dA = jnp.exp(df[..., None] * A)                              # (B,C,di,N)
+    dBx = (df * x.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]                 # (B,C,di,N)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum                          # (B,C,di,N)
+    y = jnp.einsum("bcdn,bcn->bcd", h_all, cmat.astype(jnp.float32))
+    return h_all[:, -1], y
+
+
+def mamba_mix(x: jnp.ndarray, p: Params, chunk: int = 64,
+              state: Optional["MambaState"] = None
+              ) -> Tuple[jnp.ndarray, "MambaState"]:
+    """Full-sequence Mamba mixer. x: (B,S,D) -> (y, MambaState)."""
+    b, s, d = x.shape
+    di = p["in_proj"].shape[1] // 2
+    n = p["A_log"].shape[1]
+    kconv = p["conv_w"].shape[0]
+    xz = dense(x, p["in_proj"])
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    hist = state.conv if state is not None else None
+    xs = jax.nn.silu(_causal_conv(x_raw, p["conv_w"], p["conv_b"], hist))
+    # trailing conv context for decode continuation
+    if s >= kconv - 1:
+        conv_tail = x_raw[:, s - (kconv - 1):]
+    else:
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((b, kconv - 1 - s, di), x_raw.dtype), x_raw], axis=1)
+    delta, bmat, cmat = _mamba_ssm_params(xs, p, n)
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        # padded timesteps must be state-identity: delta=0 -> dA=1, dBx=0
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xs_p = xs
+
+    def body(h, inp):
+        dlt, bm, cm, xc = inp
+        h_new, y = _mamba_chunk(h, dlt, bm, cm, xc, A)
+        return h_new, y
+
+    h0 = state.h if state is not None else jnp.zeros((b, di, n), jnp.float32)
+    resh = lambda t: t.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(body), h0,
+        (resh(delta), resh(bmat), resh(cmat), resh(xs_p)))
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, di)[:, :s]
+    y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)
+    return (dense(y * jax.nn.silu(z), p["out_proj"]),
+            MambaState(h_last, conv_tail))
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray        # (B, di, N) fp32
+    conv: jnp.ndarray     # (B, K-1, di) — conv ring buffer
+
+
+def init_mamba_state(batch: int, p: Params) -> MambaState:
+    di = p["in_proj"].shape[1] // 2
+    n = p["A_log"].shape[1]
+    k = p["conv_w"].shape[0]
+    return MambaState(jnp.zeros((batch, di, n), jnp.float32),
+                      jnp.zeros((batch, k - 1, di), p["conv_w"].dtype))
+
+
+def mamba_decode(x: jnp.ndarray, p: Params, st: MambaState
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token step. x: (B, 1, D)."""
+    n = p["A_log"].shape[1]
+    xz = dense(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                 # (B,1,di)
+    hist = jnp.concatenate([st.conv, xs], axis=1)     # (B,K,di)
+    conv = jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"]
+    xs1 = jax.nn.silu(conv)[:, None, :]
+    delta, bmat, cmat = _mamba_ssm_params(xs1, p, n)
+    A = -jnp.exp(p["A_log"])
+    df = delta[:, 0].astype(jnp.float32)              # (B,di)
+    dA = jnp.exp(df[..., None] * A)
+    dBx = (df * xs1[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * st.h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xs1[:, 0] * p["D"].astype(x.dtype)
+    out = dense((y * jax.nn.silu(z[:, 0]))[:, None], p["out_proj"])
+    return out, MambaState(h, hist[:, 1:])
+
+
+def mamba_block(x, p, cfg, state=None, decode=False):
+    h = rmsnorm(x, p["ln"])
+    if decode:
+        y, new_state = mamba_decode(h, p, state)
+        return x + y, new_state
+    y, new_state = mamba_mix(h, p, cfg.ssm_chunk, state)
+    return x + y, new_state
+
+
+# ==========================================================================
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory)
+# ==========================================================================
+
+def init_mlstm(rng, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    dh = d_model // n_heads
+    rs = jax.random.split(rng, 7)
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "wq": _winit(rs[0], (d_model, d_model), d_model, dtype),
+        "wk": _winit(rs[1], (d_model, d_model), d_model, dtype),
+        "wv": _winit(rs[2], (d_model, d_model), d_model, dtype),
+        "wi": _winit(rs[3], (d_model, n_heads), d_model, jnp.float32),
+        "wf": _winit(rs[4], (d_model, n_heads), d_model, jnp.float32),
+        "wz": _winit(rs[5], (d_model, d_model), d_model, dtype),
+        "wo": _winit(rs[6], (d_model, d_model), d_model, dtype),
+    }
+
+
+class LstmState(NamedTuple):
+    c: jnp.ndarray   # mLSTM: (B,H,dk,dv); sLSTM: (B,D)
+    n: jnp.ndarray   # mLSTM: (B,H,dk);    sLSTM: (B,D)
+    m: jnp.ndarray   # stabilizer: (B,H) / (B,D)
+
+
+def init_mlstm_state(batch: int, n_heads: int, dh: int) -> LstmState:
+    return LstmState(jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                     jnp.zeros((batch, n_heads, dh), jnp.float32),
+                     jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def _mlstm_step(st: LstmState, q, k, v, i_pre, f_pre):
+    """One mLSTM cell step. q/k/v: (B,H,dh); i/f pre-activations: (B,H)."""
+    dh = q.shape[-1]
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + st.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + st.m - m_new)
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    c = (f_g[..., None, None] * st.c
+         + i_g[..., None, None] * (v.astype(jnp.float32)[..., None, :]
+                                   * kf[..., :, None]))
+    n = f_g[..., None] * st.n + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return LstmState(c, n, m_new), h
+
+
+def mlstm_mix(x: jnp.ndarray, p: Params, n_heads: int, chunk: int = 64,
+              state: Optional[LstmState] = None
+              ) -> Tuple[jnp.ndarray, LstmState]:
+    b, s, d = x.shape
+    dh = d // n_heads
+    q = dense(x, p["wq"]).reshape(b, s, n_heads, dh)
+    k = dense(x, p["wk"]).reshape(b, s, n_heads, dh)
+    v = dense(x, p["wv"]).reshape(b, s, n_heads, dh)
+    i_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"])
+    f_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"])
+    z = dense(x, p["wz"])
+
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        # state-identity padding: i-gate -> -inf (no write), f-gate -> keep
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)
+
+    def padc(t):
+        if pad and t.shape[1] != n_chunks * chunk:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(st, inp):
+        qc, kc, vc, ic, fc = inp
+
+        def inner(st, tup):
+            qt, kt, vt, it, ft = tup
+            st, h = _mlstm_step(st, qt, kt, vt, it, ft)
+            return st, h
+
+        st, hs = jax.lax.scan(
+            inner, st, tuple(jnp.swapaxes(t, 0, 1)
+                             for t in (qc, kc, vc, ic, fc)))
+        return st, jnp.swapaxes(hs, 0, 1)
+
+    st0 = state if state is not None else init_mlstm_state(b, n_heads, dh)
+    st, hs = jax.lax.scan(jax.checkpoint(body), st0,
+                          (padc(q), padc(k), padc(v), padc(i_pre),
+                           padc(f_pre)))
+    h = hs.swapaxes(0, 1).reshape(b, n_chunks * chunk, d)[:, :s]
+    out = dense(h.astype(x.dtype) * jax.nn.silu(z), p["wo"])
+    return out, st
+
+
+def init_slstm(rng, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    dh = d_model // n_heads
+    rs = jax.random.split(rng, 9)
+    p = {"ln": jnp.ones((d_model,), dtype)}
+    for i, g in enumerate("ifzo"):
+        p[f"w{g}"] = _winit(rs[i], (d_model, d_model), d_model, dtype)
+        p[f"r{g}"] = _winit(rs[4 + i], (n_heads, dh, dh), dh, dtype)
+        p[f"b{g}"] = jnp.zeros((d_model,), jnp.float32)
+    p["wo_out"] = _winit(rs[8], (d_model, d_model), d_model, dtype)
+    return p
+
+
+class SlstmState(NamedTuple):
+    c: jnp.ndarray   # (B, D)
+    n: jnp.ndarray   # (B, D)
+    m: jnp.ndarray   # (B, D)
+    h: jnp.ndarray   # (B, D) — recurrent hidden input to the gates
+
+
+def init_slstm_state(batch: int, d_model: int) -> SlstmState:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SlstmState(z, z + 1e-6, z - 1e30, z)
+
+
+def _slstm_step(p: Params, n_heads: int, st: SlstmState, x_t):
+    """x_t: dict of (B,D) pre-projected gate inputs (+ optional 'v' valid
+    flag (B,1) — invalid (padded) steps leave the state untouched)."""
+    b, d = st.h.shape
+    dh = d // n_heads
+    hh = st.h.reshape(b, n_heads, dh)
+
+    def gate(g):
+        rec = jnp.einsum("bhk,hkv->bhv", hh.astype(jnp.float32),
+                         p[f"r{g}"].astype(jnp.float32)).reshape(b, d)
+        return x_t[g] + rec + p[f"b{g}"]
+
+    i_pre, f_pre, z_pre, o_pre = (gate(g) for g in "ifzo")
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + st.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + st.m - m_new)
+    z_t = jnp.tanh(z_pre)
+    c = f_g * st.c + i_g * z_t
+    n = f_g * st.n + i_g
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    new = SlstmState(c, n, m_new, h)
+    if "v" in x_t:
+        v = x_t["v"]
+        new = SlstmState(*(v * a + (1.0 - v) * b_
+                           for a, b_ in zip(new, st)))
+    return new, h
+
+
+def slstm_mix(x: jnp.ndarray, p: Params, n_heads: int, chunk: int = 64,
+              state: Optional[LstmState] = None
+              ) -> Tuple[jnp.ndarray, LstmState]:
+    b, s, d = x.shape
+    xg = {g: jnp.einsum("bsd,df->bsf", x, p[f"w{g}"]).astype(jnp.float32)
+          for g in "ifzo"}
+    xg["v"] = jnp.ones((b, s, 1), jnp.float32)  # valid-step flag
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    keys = "ifzov"
+
+    def padc(t):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        return t.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+
+    def body(st, inp):
+        def inner(st, x_t):
+            st, h = _slstm_step(p, n_heads, st, dict(zip(keys, x_t)))
+            return st, h
+
+        st, hs = jax.lax.scan(
+            inner, st, tuple(jnp.swapaxes(inp[g], 0, 1) for g in keys))
+        return st, jnp.swapaxes(hs, 0, 1)
+
+    st0 = state if state is not None else init_slstm_state(b, d)
+    st, hs = jax.lax.scan(
+        jax.checkpoint(body), st0, ({g: padc(xg[g]) for g in keys}))
+    h = hs.swapaxes(0, 1).reshape(b, n_chunks * chunk, d)[:, :s]
+    return dense(h.astype(x.dtype), p["wo_out"]), st
+
+
+def mlstm_block(x, p, cfg, state=None, decode=False):
+    h = rmsnorm(x, p["ln"])
+    if decode:
+        b = x.shape[0]
+        dh = cfg.d_model // cfg.n_heads
+        q = dense(h[:, 0], p["wq"]).reshape(b, cfg.n_heads, dh)
+        k = dense(h[:, 0], p["wk"]).reshape(b, cfg.n_heads, dh)
+        v = dense(h[:, 0], p["wv"]).reshape(b, cfg.n_heads, dh)
+        i_pre = h[:, 0].astype(jnp.float32) @ p["wi"]
+        f_pre = h[:, 0].astype(jnp.float32) @ p["wf"]
+        z = dense(h[:, 0], p["wz"])
+        st, hh = _mlstm_step(state, q, k, v, i_pre, f_pre)
+        hh = hh.reshape(b, cfg.d_model)
+        out = dense((hh.astype(x.dtype) * jax.nn.silu(z))[:, None], p["wo"])
+        return x + out, st
+    y, st = mlstm_mix(h, p, cfg.n_heads, cfg.ssm_chunk, state)
+    return x + y, st
+
+
+def slstm_block(x, p, cfg, state=None, decode=False):
+    h = rmsnorm(x, p["ln"])
+    if decode:
+        xt = {g: (h[:, 0] @ p[f"w{g}"]).astype(jnp.float32) for g in "ifzo"}
+        st, hh = _slstm_step(p, cfg.n_heads, state, xt)
+        out = dense(hh.astype(x.dtype)[:, None], p["wo_out"])
+        return x + out, st
+    y, st = slstm_mix(h, p, cfg.n_heads, cfg.ssm_chunk, state)
+    return x + y, st

@@ -1,0 +1,92 @@
+"""Minimal, pytree-generic optimizers (no external deps).
+
+Used by both the MARL nets in ``repro.core`` and the LM trainer in
+``repro.train``.  State is a pytree mirroring the params, so it shards with
+whatever sharding the params carry (ZeRO-style sharding is applied by the
+caller via sharding constraints in ``repro.dist``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = None
+    # dtype for first/second moments; bf16 moments halve optimizer memory
+    moment_dtype: Optional[jnp.dtype] = None
+
+    def init(self, params: Any) -> AdamState:
+        dt = self.moment_dtype
+
+        def z(p):
+            return jnp.zeros_like(p, dtype=dt or p.dtype)
+
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params))
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: Any, state: AdamState, params: Any
+               ) -> Tuple[Any, AdamState]:
+        step = state.step + 1
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g).astype(v.dtype), state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            delta = lr * mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return f

@@ -1,0 +1,183 @@
+"""Checkpointing: zstd-compressed msgpack shards, atomic, async, elastic.
+
+Layout:   <dir>/step_<N>/manifest.msgpack       (tree structure + hashes)
+          <dir>/step_<N>/data.msgpack.zst       (leaf bytes)
+
+Properties needed at scale, all implemented here and exercised by tests:
+  * atomic publish — written to ``.tmp-...`` then renamed; a crash mid-save
+    never corrupts the latest checkpoint;
+  * integrity — per-leaf crc32 verified on load;
+  * async — a single background writer thread; ``wait()`` drains;
+  * keep-last-k garbage collection;
+  * elastic restore — leaves are stored as *global* arrays with dtype/shape
+    metadata and re-placed under any target sharding/mesh on load (different
+    device count than at save time is fine).
+
+On a multi-host deployment the natural extension is per-host shard files
+keyed by (leaf, shard-index); the manifest format already carries global
+shapes so only the writer changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(path: str, step: int, tree: Any,
+         meta: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous atomic checkpoint write. Returns final directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten(tree)
+    cctx = zstd.ZstdCompressor(level=3)
+    blobs: Dict[str, bytes] = {}
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        blobs[key] = cctx.compress(raw)
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc": zlib.crc32(raw),
+        }
+    with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
+        f.write(msgpack.packb(blobs))
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def available_steps(path: str) -> List[int]:
+    if not os.path.isdir(path):
+        return []
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d[5:]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def restore(path: str, step: Optional[int] = None,
+            target: Any = None, shardings: Any = None
+            ) -> Tuple[int, Any, Dict[str, Any]]:
+    """Load a checkpoint.
+
+    ``target``: abstract tree (structure + ShapeDtypeStruct leaves) to
+    restore into; ``shardings``: matching NamedSharding tree (optional) —
+    elastic re-placement happens here via device_put.
+    """
+    steps = available_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    step = step if step is not None else steps[-1]
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with open(os.path.join(d, "data.msgpack.zst"), "rb") as f:
+        blobs = msgpack.unpackb(f.read())
+    dctx = zstd.ZstdDecompressor()
+
+    arrays: Dict[str, np.ndarray] = {}
+    for key, info in manifest["leaves"].items():
+        raw = dctx.decompress(blobs[key])
+        if zlib.crc32(raw) != info["crc"]:
+            raise IOError(f"checkpoint corruption in leaf {key}")
+        arrays[key] = np.frombuffer(raw, dtype=info["dtype"]).reshape(
+            info["shape"])
+
+    if target is None:
+        # rebuild a flat dict
+        return step, arrays, manifest["meta"]
+
+    flat_target = _flatten(target)
+    flat_shard = _flatten(shardings) if shardings is not None else None
+    leaves_out = []
+    for i, (key, leaf) in enumerate(flat_target):
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        if flat_shard is not None:
+            leaves_out.append(jax.device_put(arr, flat_shard[i][1]))
+        else:
+            leaves_out.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(target)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves_out), \
+        manifest["meta"]
+
+
+class CheckpointManager:
+    """Async writer + keep-last-k retention."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+
+    def save_async(self, step: int, tree: Any,
+                   meta: Optional[Dict[str, Any]] = None) -> None:
+        # snapshot to host memory *now* (training may mutate buffers after)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+
+        def work():
+            save(self.path, step, host_tree, meta)
+            self._gc()
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def save_sync(self, step: int, tree: Any,
+                  meta: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        save(self.path, step, jax.tree.map(lambda x: np.asarray(x), tree),
+             meta)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def latest_step(self) -> Optional[int]:
+        steps = available_steps(self.path)
+        return steps[-1] if steps else None
+
+    def _gc(self) -> None:
+        with self._lock:
+            steps = available_steps(self.path)
+            for s in steps[:-self.keep]:
+                shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                              ignore_errors=True)

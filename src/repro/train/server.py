@@ -1,0 +1,128 @@
+"""Batched serving with continuous-batching slots.
+
+A fixed decode batch of ``n_slots``; requests are prefilled individually
+(disaggregated prefill), inserted into free slots of the live batched cache
+(per-sequence positions — slots run at different depths), and decoded
+together.  Finished slots free immediately and new requests join without
+draining the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the server
+    output: Optional[List[int]] = None
+    latency_s: Optional[float] = None
+
+
+def _insert_slot(cache, req_cache, slot: int):
+    """Copy a single-request cache into batch slot ``slot``."""
+
+    def ins(batched, single):
+        if batched.ndim == 1:        # pos: (B,)
+            return batched.at[slot].set(single[0])
+        # layer leaves: (R, B, ...)
+        return jax.lax.dynamic_update_slice_in_dim(
+            batched, single, slot, axis=1)
+
+    return jax.tree.map(ins, cache, req_cache)
+
+
+class Server:
+    def __init__(self, params, cfg: T.ArchConfig, n_slots: int = 4,
+                 max_len: int = 512,
+                 decode_fn: Optional[Callable] = None,
+                 greedy: bool = True):
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len = n_slots, max_len
+        self.cache = T.init_cache(cfg, n_slots, max_len)
+        self.free = list(range(n_slots))
+        self.active: Dict[int, Request] = {}
+        self.last_tok = np.zeros((n_slots, 1), np.int32)
+        self.new_counts: Dict[int, int] = {}
+        self.queue: Deque[Request] = deque()
+        self._t0: Dict[int, float] = {}
+        self._decode = decode_fn or jax.jit(
+            lambda p, c, t: T.decode_step(p, c, t, cfg), donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, b, cfg, max_len),
+            static_argnums=())
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.free and self.queue:
+            req = self.queue.popleft()
+            slot = self.free.pop()
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            if self.cfg.vision_prefix:
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.vision_prefix, self.cfg.d_model),
+                    self.cfg.dtype)
+            if self.cfg.enc_dec:
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.enc_seq, self.cfg.d_model), self.cfg.dtype)
+            logits, rc = self._prefill(self.params, batch)
+            self.cache = _insert_slot(self.cache, rc, slot)
+            first = int(jnp.argmax(logits[0]))
+            req.output = [first]
+            self.last_tok[slot, 0] = first
+            self.active[slot] = req
+            self.new_counts[slot] = 1
+            self._t0[slot] = time.perf_counter()
+
+    # ------------------------------------------------------------- decode
+    def _finish(self, slot: int):
+        req = self.active.pop(slot)
+        req.latency_s = time.perf_counter() - self._t0.pop(slot)
+        self.new_counts.pop(slot)
+        self.free.append(slot)
+        return req
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok))
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        done: List[Request] = []
+        for slot, req in list(self.active.items()):
+            t = int(toks[slot])
+            req.output.append(t)
+            self.last_tok[slot, 0] = t
+            self.new_counts[slot] += 1
+            ended = (req.eos_id is not None and t == req.eos_id)
+            full = (self.new_counts[slot] >= req.max_new_tokens)
+            too_long = (len(req.prompt) + self.new_counts[slot]
+                        >= self.max_len - 1)
+            if ended or full or too_long:
+                done.append(self._finish(slot))
+        return done
+
+    def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
+        out: List[Request] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out

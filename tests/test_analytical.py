@@ -1,0 +1,117 @@
+"""Property tests for the TPU analytical latency oracle (the measurement
+simulator) and the HLO analysis machinery."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.hw import analytical as AN
+from repro.hw.tpu_spec import DEFAULT, mxu_efficiency
+from repro.hw import hlo_analysis as HA
+
+WL = dict(b=1, h=28, w=28, ci=96, co=128, kh=3, kw=3, stride=1, pad=1)
+
+
+def test_min_latency_is_lower_bound():
+    lo = AN.conv2d_min_latency(WL)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        lat, _ = AN.conv2d_latency(
+            WL,
+            tile_b=1, tile_h=2 ** rng.integers(0, 5),
+            tile_w=2 ** rng.integers(0, 5),
+            tile_ci=2 ** rng.integers(0, 7), tile_co=2 ** rng.integers(0, 8),
+            h_threading=2 ** rng.integers(0, 3),
+            oc_threading=2 ** rng.integers(0, 3))
+        assert float(lat) >= lo * 0.999
+
+
+def test_threading_overlaps_compute_and_memory():
+    """Threaded config (VTA virtual-thread analog) is never slower."""
+    kw = dict(tile_b=1, tile_h=8, tile_w=8, tile_ci=32, tile_co=64)
+    lat1, _ = AN.conv2d_latency(WL, h_threading=1, oc_threading=1, **kw)
+    lat2, _ = AN.conv2d_latency(WL, h_threading=2, oc_threading=2, **kw)
+    assert float(lat2) < float(lat1)
+
+
+def test_vmem_overflow_is_infeasible():
+    lat, vmem = AN.gemm_latency(4096, 4096, 4096, 4096, 4096, 4096, 4, 4)
+    assert float(vmem) > DEFAULT.vmem_bytes
+    assert float(lat) >= 1e11  # failure sentinel
+
+
+def test_mxu_alignment_efficiency():
+    assert mxu_efficiency(128) == 1.0
+    assert mxu_efficiency(64) == 0.5
+    assert abs(mxu_efficiency(129) - 129 / 256) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(32, 2048), n=st.integers(32, 2048),
+       k=st.integers(32, 2048))
+def test_gemm_latency_monotone_in_problem_size(m, n, k):
+    """2x the work in any dim never makes the (fixed-tile) GEMM faster."""
+    kw = dict(tile_m=128, tile_n=128, tile_k=128, threads_m=2, threads_n=2)
+    l1, _ = AN.gemm_latency(m, n, k, **kw)
+    l2, _ = AN.gemm_latency(2 * m, n, k, **kw)
+    l3, _ = AN.gemm_latency(m, 2 * n, k, **kw)
+    assert float(l2) >= float(l1) * 0.999
+    assert float(l3) >= float(l1) * 0.999
+
+
+def test_latency_vectorizes_under_vmap():
+    f = lambda t: AN.gemm_latency(512, 512, 512, t, 128, 128, 2, 2)[0]
+    tiles = jnp.asarray([8.0, 32.0, 128.0, 512.0])
+    out = jax.vmap(f)(tiles)
+    assert out.shape == (4,)
+    assert bool(jnp.isfinite(out).all())
+
+
+# ------------------------------------------------------------ HLO analysis
+
+_FAKE_HLO = """\
+HloModule test, entry_computation_layout={()->f32[4]{0}}
+
+%body.1 (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %lhs = f32[8,16]{1,0} constant(0)
+  %rhs = f32[16,4]{1,0} constant(0)
+  %d = f32[8,4]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4]{0} all-reduce(%gte), replica_groups={}, to_apply=%sum.2
+  ROOT %t = (s32[], f32[4]) tuple(%c, %gte)
+}
+
+%sum.2 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond.3 (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main.4 (x: f32[4]) -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  %init = (s32[], f32[4]) tuple(%c0, %x)
+  %w = (s32[], f32[4]) while(%init), condition=%cond.3, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %d2 = f32[8,4]{1,0} dot(%lhs2, %rhs2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_trip_count_weighting():
+    # the body dot needs operand shape knowledge; provide via same comp
+    hlo = _FAKE_HLO.replace("%d2 = f32[8,4]{1,0} dot(%lhs2, %rhs2)",
+                            "%lhs2 = f32[8,16]{1,0} constant(0)\n"
+                            "  %rhs2 = f32[16,4]{1,0} constant(0)\n"
+                            "  %d2 = f32[8,4]{1,0} dot(%lhs2, %rhs2)")
+    r = HA.analyze(hlo)
+    # body dot: 2*8*4*16 = 1024 flops x trip 10; entry dot: 1024 x 1
+    assert r["weighted_dot_flops"] == 1024 * 10 + 1024
+    # all-reduce: 16 bytes x 10 trips, wire mult 2
+    assert r["collective_bytes_by_op"]["all-reduce"] == 16 * 10
+    assert r["wire_bytes_per_device"] == 2 * 16 * 10

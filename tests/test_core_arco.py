@@ -1,0 +1,180 @@
+"""Unit + property tests for the paper's core algorithm (ARCO)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import confidence_sampling as CS
+from repro.core import mappo
+from repro.core.cost_model import GBTModel
+from repro.core.design_space import (AGENT_KNOBS, AGENTS, DesignSpace,
+                                     N_KNOBS, reward_with_penalty)
+from repro.core import agents as A
+from repro.hw.analytical import conv2d_min_latency
+
+WL = dict(b=1, h=14, w=14, ci=64, co=64, kh=3, kw=3, stride=1, pad=1)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return DesignSpace.for_conv2d(WL)
+
+
+# ------------------------------------------------------------ design space
+
+def test_agent_partition_covers_all_knobs():
+    got = sorted(i for ks in AGENT_KNOBS.values() for i in ks)
+    assert got == list(range(N_KNOBS))
+    assert set(AGENT_KNOBS) == set(AGENTS)
+
+
+def test_space_values_and_clip(space):
+    rng = jax.random.PRNGKey(0)
+    cfgs = space.random_configs(rng, 64)
+    assert cfgs.shape == (64, N_KNOBS)
+    assert bool((cfgs >= 0).all())
+    assert bool((np.asarray(cfgs) < space.n_choices[None, :]).all())
+    vals = space.values(cfgs)
+    for i, ch in enumerate(space.choices):
+        assert set(np.asarray(vals)[:, i]).issubset(set(ch))
+
+
+def test_measure_positive_and_beats_roofline(space):
+    cfgs = space.random_configs(jax.random.PRNGKey(1), 128)
+    lat = np.asarray(space.measure(cfgs))
+    assert (lat > 0).all()
+    # no configuration beats the roofline lower bound
+    assert lat.min() >= conv2d_min_latency(WL) * 0.999
+
+
+@settings(max_examples=20, deadline=None)
+@given(deltas=st.lists(st.integers(-1, 1), min_size=N_KNOBS,
+                       max_size=N_KNOBS))
+def test_apply_deltas_stays_in_bounds(deltas):
+    space = DesignSpace.for_conv2d(WL)
+    cfg = jnp.zeros((N_KNOBS,), jnp.int32)
+    out = np.asarray(space.apply_deltas(cfg, jnp.asarray(deltas)))
+    assert (out >= 0).all() and (out < space.n_choices).all()
+
+
+def test_penalty_reduces_reward():
+    lat = jnp.asarray(1e-4)
+    r_ok = reward_with_penalty(lat, jnp.asarray(1e6))
+    r_bad = reward_with_penalty(lat, jnp.asarray(300e6))
+    assert float(r_bad) < float(r_ok)
+
+
+# ------------------------------------------------------- confidence sampling
+
+def test_cs_selects_at_most_n(space):
+    rng = np.random.default_rng(0)
+    configs = np.asarray(space.random_configs(jax.random.PRNGKey(2), 200))
+    v = rng.normal(size=200)
+    out = CS.confidence_sampling(configs, v, 32, space.n_choices)
+    assert len(out) <= 32
+    assert out.shape[1] == N_KNOBS
+    assert (out >= 0).all() and (out < space.n_choices[None]).all()
+
+
+def test_cs_prefers_high_value_configs(space):
+    """Probability-guided selection: high-scored configs dominate picks."""
+    configs = np.asarray(space.random_configs(jax.random.PRNGKey(3), 500))
+    configs = np.unique(configs, axis=0)
+    v = np.linspace(-5, 5, len(configs))  # later configs better
+    out = CS.confidence_sampling(configs, v, 40, space.n_choices, seed=1)
+    idx_of = {tuple(c): i for i, c in enumerate(configs)}
+    ranks = [idx_of[tuple(c)] for c in out if tuple(c) in idx_of]
+    assert np.mean(ranks) > len(configs) * 0.6
+
+
+def test_cs_threshold_is_median():
+    v = np.asarray([1.0, 2.0, 3.0, 4.0, 100.0])
+    assert CS.compute_dynamic_threshold(v) == 3.0
+
+
+def test_cs_synthesize_modes():
+    rng = np.random.default_rng(0)
+    configs = np.asarray([[0, 1, 2, 0, 0, 1, 1]] * 8 + [[3, 3, 3, 1, 1, 0, 0]])
+    out = CS.synthesize(configs, np.asarray([9] * 7), rng, 1)
+    np.testing.assert_array_equal(out[0], [0, 1, 2, 0, 0, 1, 1])
+
+
+# ----------------------------------------------------------------- MAPPO
+
+def test_gae_matches_naive_loop():
+    T, E = 7, 3
+    rng = np.random.default_rng(0)
+    rewards = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    values = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    last = jnp.asarray(rng.normal(size=(E,)), jnp.float32)
+    gamma, lam = 0.9, 0.8
+    advs, rets = mappo.gae(rewards, values, last, gamma, lam)
+
+    vals = np.concatenate([np.asarray(values), np.asarray(last)[None]], 0)
+    expect = np.zeros((T, E))
+    running = np.zeros(E)
+    for t in reversed(range(T)):
+        delta = np.asarray(rewards)[t] + gamma * vals[t + 1] - vals[t]
+        running = delta + gamma * lam * running
+        expect[t] = running
+    np.testing.assert_allclose(np.asarray(advs), expect, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rets),
+                               expect + np.asarray(values), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_action_decode_roundtrip():
+    for agent in AGENTS:
+        n = A.AGENT_N_ACTIONS[agent]
+        deltas = A.decode_action(agent, jnp.arange(n))
+        assert deltas.shape == (n, A.AGENT_N_KNOBS[agent])
+        assert bool((deltas >= -1).all()) and bool((deltas <= 1).all())
+        # all joint adjustments distinct
+        assert len(np.unique(np.asarray(deltas), axis=0)) == n
+
+
+def test_mappo_episode_improves_surrogate(space):
+    """Policy should climb the (fixed) surrogate over episodes."""
+    hp = mappo.MappoConfig(n_steps=24, n_envs=8, epochs=4)
+    env = mappo.env_params_from_space(space)
+    # surrogate: GBT trained on real oracle -> dense, informative reward
+    cfgs = space.random_configs(jax.random.PRNGKey(0), 256)
+    gbt = GBTModel(n_rounds=16)
+    gbt.update(np.asarray(space.feature_vector(cfgs)),
+               -np.log(np.asarray(space.measure(cfgs))))
+    forest = gbt.to_forest()
+    params, opt_state = mappo.init_state(jax.random.PRNGKey(1), hp)
+    rewards = []
+    rng = jax.random.PRNGKey(2)
+    for ep in range(12):
+        rng, r = jax.random.split(rng)
+        params, opt_state, visited, stats = mappo.train_episode(
+            params, opt_state, r, env, forest, hp)
+        rewards.append(float(stats["mean_reward"]))
+    assert np.mean(rewards[-3:]) > np.mean(rewards[:3])
+
+
+# ------------------------------------------------------------- cost model
+
+def test_gbt_learns_latency_surface(space):
+    cfgs = space.random_configs(jax.random.PRNGKey(5), 512)
+    X = np.asarray(space.feature_vector(cfgs))
+    y = -np.log(np.asarray(space.measure(cfgs)))
+    m = GBTModel(n_rounds=25)
+    m.update(X[:400], y[:400])
+    pred = m.predict(X[400:])
+    corr = np.corrcoef(pred, y[400:])[0, 1]
+    assert corr > 0.8, corr
+
+
+def test_gbt_jnp_matches_numpy_predict(space):
+    from repro.core import cost_model as CM
+    cfgs = space.random_configs(jax.random.PRNGKey(6), 128)
+    X = np.asarray(space.feature_vector(cfgs))
+    y = -np.log(np.asarray(space.measure(cfgs)))
+    m = GBTModel(n_rounds=10)
+    m.update(X, y)
+    jp = np.asarray(CM.predict(m.to_forest(), jnp.asarray(X)))
+    np.testing.assert_allclose(jp, m.predict(X), rtol=1e-5, atol=1e-5)

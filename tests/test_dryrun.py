@@ -1,0 +1,74 @@
+"""Dry-run pipeline tests (subprocess with 8 placeholder devices; the
+production 512-device sweep artifacts live in artifacts/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run_dryrun(args, devices=8, timeout=420):
+    env = dict(os.environ, PYTHONPATH=SRC,
+               REPRO_DRYRUN_DEVICES=str(devices))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    return res
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-1.5b", "train_4k"),
+    ("whisper-base", "decode_32k"),
+    ("xlstm-1.3b", "long_500k"),
+])
+def test_dryrun_cell_compiles(tmp_path, arch, shape):
+    res = run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "pod",
+                      "--batch", "8", "--out", str(tmp_path)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 1
+    art = json.load(open(tmp_path / files[0]))
+    assert art["status"] == "ok"
+    assert art["weighted"]["dot_flops_per_device"] > 0
+    assert art["temp_size_in_bytes"] > 0
+
+
+def test_dryrun_multipod_axis_shards(tmp_path):
+    res = run_dryrun(["--arch", "smollm-360m", "--shape", "train_4k",
+                      "--mesh", "multipod", "--batch", "8",
+                      "--out", str(tmp_path)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    art = json.load(open(tmp_path / os.listdir(tmp_path)[0]))
+    assert art["status"] == "ok"
+    assert "pod=2" in art["mesh_desc"]
+
+
+def test_dryrun_long_context_skip(tmp_path):
+    res = run_dryrun(["--arch", "qwen2-1.5b", "--shape", "long_500k",
+                      "--mesh", "pod", "--out", str(tmp_path)])
+    assert res.returncode == 0
+    art = json.load(open(tmp_path / os.listdir(tmp_path)[0]))
+    assert art["status"] == "skipped"
+    assert "full-attention" in art["reason"]
+
+
+@pytest.mark.skipif(not os.path.isdir(ART),
+                    reason="production sweep artifacts not generated")
+def test_production_sweep_complete():
+    """The committed 512-device sweep must cover all 80 cells, no errors."""
+    arts = [json.load(open(os.path.join(ART, f)))
+            for f in os.listdir(ART) if f.endswith(".json")]
+    assert len(arts) == 80
+    by_status = {}
+    for a in arts:
+        by_status.setdefault(a["status"], []).append(a)
+    assert "error" not in by_status, [
+        (a["arch"], a["shape"]) for a in by_status["error"]]
+    assert len(by_status["ok"]) == 66
+    assert len(by_status["skipped"]) == 14  # 7 full-attn archs x 2 meshes
+    for a in by_status["ok"]:
+        assert a["weighted"]["dot_flops_per_device"] > 0

@@ -1,0 +1,65 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts."""
+import json, os, sys
+import numpy as np
+sys.path.insert(0, 'src')
+import warnings; warnings.filterwarnings('ignore')
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.hw import roofline as RL
+
+def fmt(x):
+    return f"{x:.2e}"
+
+def main():
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else 'artifacts/dryrun'
+    arts = {}
+    for f in sorted(os.listdir(art_dir)):
+        d = json.load(open(os.path.join(art_dir, f)))
+        arts[(d['arch'], d['shape'], d['mesh'])] = d
+
+    # --- dry-run table (both meshes) ---
+    print('## table:dryrun')
+    print('| arch | shape | mesh | status | params/dev | temp/dev | HLO dotF/dev | coll B/dev | compile |')
+    print('|---|---|---|---|---|---|---|---|---|')
+    for (a, s, m), d in sorted(arts.items()):
+        if d['status'] == 'skipped':
+            print(f"| {a} | {s} | {m} | skipped (full attention) | | | | | |")
+            continue
+        nd = 512 if 'multipod' in m else 256
+        pdev = d['param_bytes_global'] / nd
+        w = d['weighted']
+        print(f"| {a} | {s} | {m} | ok | {pdev/2**30:.2f} GiB | "
+              f"{d['temp_size_in_bytes']/2**30:.1f} GiB* | {fmt(w['dot_flops_per_device'])} | "
+              f"{fmt(w['wire_bytes_per_device'])} | {d['compile_s']:.0f}s |")
+
+    # --- roofline table (single pod) ---
+    print()
+    print('## table:roofline')
+    print('| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | MODEL/HLO | roofline frac |')
+    print('|---|---|---|---|---|---|---|---|---|')
+    rows = []
+    for (a, s, m), d in sorted(arts.items()):
+        if d['status'] != 'ok' or m != 'pod_16x16':
+            continue
+        cfg = get_config(a); cell = SHAPES[s]
+        mesh = {p.split('=')[0].strip(): int(p.split('=')[1]) for p in d['mesh_desc'].split(' x ')}
+        r = RL.analyze_cell(cfg, cell.kind, cell.seq, cell.global_batch, mesh, d)
+        nd = int(np.prod(list(mesh.values())))
+        frac = RL.roofline_fraction(r, n_dev=nd)
+        rows.append((a, s, r, frac))
+        print(f"| {a} | {s} | {fmt(r.compute_s)} | {fmt(r.memory_s)} | {fmt(r.collective_s)} "
+              f"| **{r.dominant}** | {fmt(r.model_flops)} | {r.usefulness:.2f} | {frac:.3f} |")
+    # summary
+    doms = {}
+    for a, s, r, frac in rows:
+        doms.setdefault(r.dominant, []).append((a, s, frac))
+    print()
+    print('## summary')
+    for d, cells in doms.items():
+        print(f"- {d}-bound: {len(cells)} cells")
+    worst = sorted(rows, key=lambda x: x[-1])[:5]
+    print('- worst roofline fractions:', [(a, s, round(f, 4)) for a, s, _, f in worst])
+    best = sorted(rows, key=lambda x: -x[-1])[:5]
+    print('- best roofline fractions:', [(a, s, round(f, 4)) for a, s, _, f in best])
+
+main()
