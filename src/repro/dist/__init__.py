@@ -1,0 +1,17 @@
+"""Distributed execution layer: sharding rules over GSPMD meshes.
+
+``repro.dist.sharding`` is the runtime consumer of the co-optimization
+search: the ARCO shard-space tuner (``repro.launch.autotune``) emits a
+``ShardingRules``, and the step builders in ``repro.train.steps`` turn it
+into explicit in/out shardings for every jitted entry point.
+"""
+from repro.dist.sharding import (  # noqa: F401
+    ShardingRules,
+    axis_size,
+    batch_sharding,
+    batch_specs,
+    cache_shardings,
+    data_axes,
+    fit_axes,
+    param_shardings,
+)

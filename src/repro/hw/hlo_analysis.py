@@ -30,7 +30,11 @@ _WHILE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _TRIP = re.compile(r'known_trip_count..\{?"?n"?.?[:=]."?(\d+)')
 _REF = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)="
                   r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
-_DOT = re.compile(r"\bdot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)"
+# operands may print bare (``dot(%a, %b)``) or shape-annotated
+# (``dot(f32[8,16]{1,0} %a, ...)``) depending on the XLA version; capture
+# the annotation when present so the lhs shape needs no name lookup
+_DOT = re.compile(r"\bdot\(\s*(?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+)?"
+                  r"%?([\w\.\-]+)"
                   r".*?lhs_contracting_dims=\{([0-9,]*)\}")
 _COLL = re.compile(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
                    r"collective-permute)(?:-start)?\(")
@@ -139,7 +143,8 @@ def analyze(hlo: str) -> Dict[str, object]:
             dm = _DOT.search(rhs)
             if dm and " dot(" in rhs:
                 res = _first_shape(rhs)
-                lhs = shapes.get(dm.group(1))
+                lhs = (_first_shape(dm.group(1)) if dm.group(1)
+                       else shapes.get(dm.group(2)))
                 if res and lhs:
                     rnum = 1
                     for d in res[1]:

@@ -1,3 +1,11 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# Shared jax-version compat: jax renamed pltpu.TPUCompilerParams ->
+# pltpu.CompilerParams; kernel modules take the alias from here so the
+# next rename is one edit.
+from jax.experimental.pallas import tpu as _pltpu
+
+_CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams

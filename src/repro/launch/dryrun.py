@@ -150,6 +150,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 if v is not None:
                     result[k] = int(v)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else None
         if cost:
             result["cost_flops"] = float(cost.get("flops", 0.0))
             result["cost_bytes"] = float(cost.get("bytes accessed", 0.0))

@@ -30,7 +30,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                         # optional dep: fall back to stdlib zlib when
+    import zstandard as zstd  # zstandard isn't installed (dependency-light
+except ImportError:           # environments); the manifest records which
+    zstd = None               # codec wrote each checkpoint.
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compress_fn(codec: str):
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress
+    return lambda raw: zlib.compress(raw, 6)
+
+
+def _decompress_fn(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise ImportError(
+                "checkpoint was written with the zstd codec but the "
+                "zstandard package is not installed")
+        return zstd.ZstdDecompressor().decompress
+    return zlib.decompress
 
 
 def _flatten(tree: Any) -> List[Tuple[str, Any]]:
@@ -51,13 +73,14 @@ def save(path: str, step: int, tree: Any,
     os.makedirs(tmp, exist_ok=True)
 
     leaves = _flatten(tree)
-    cctx = zstd.ZstdCompressor(level=3)
+    compress = _compress_fn(DEFAULT_CODEC)
     blobs: Dict[str, bytes] = {}
-    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    manifest = {"step": step, "meta": meta or {}, "leaves": {},
+                "codec": DEFAULT_CODEC}
     for key, leaf in leaves:
         arr = np.asarray(leaf)
         raw = arr.tobytes()
-        blobs[key] = cctx.compress(raw)
+        blobs[key] = compress(raw)
         manifest["leaves"][key] = {
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
@@ -104,11 +127,12 @@ def restore(path: str, step: Optional[int] = None,
         manifest = msgpack.unpackb(f.read())
     with open(os.path.join(d, "data.msgpack.zst"), "rb") as f:
         blobs = msgpack.unpackb(f.read())
-    dctx = zstd.ZstdDecompressor()
+    # pre-codec checkpoints carry no codec field and are always zstd
+    decompress = _decompress_fn(manifest.get("codec", "zstd"))
 
     arrays: Dict[str, np.ndarray] = {}
     for key, info in manifest["leaves"].items():
-        raw = dctx.decompress(blobs[key])
+        raw = decompress(blobs[key])
         if zlib.crc32(raw) != info["crc"]:
             raise IOError(f"checkpoint corruption in leaf {key}")
         arrays[key] = np.frombuffer(raw, dtype=info["dtype"]).reshape(

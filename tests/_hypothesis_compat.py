@@ -1,0 +1,116 @@
+"""Deterministic fallback for ``hypothesis`` in dependency-light envs.
+
+When the real package is absent, property tests degrade to seeded
+spot-checks: ``@given`` runs the test body over a fixed number of draws
+from a PRNG seeded by the test name, so failures reproduce exactly and the
+suite needs nothing beyond the standard library.
+
+Usage (at the top of a test module):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Only the strategy surface the repo's tests use is implemented: integers,
+booleans, sampled_from, lists.  ``REPRO_COMPAT_MAX_EXAMPLES`` caps draws
+per test (default 8) to keep the fallback cheap.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import zlib
+from typing import Any, Callable, Dict
+
+_DEFAULT_MAX_EXAMPLES = int(os.environ.get("REPRO_COMPAT_MAX_EXAMPLES", "8"))
+
+
+class Strategy:
+    """A draw rule: ``example(rng)`` produces one value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return f"Strategy({self.label})"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value),
+                        f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+    @staticmethod
+    def sampled_from(values) -> Strategy:
+        values = list(values)
+        return Strategy(lambda rng: values[rng.randrange(len(values))],
+                        f"sampled_from({values!r})")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(draw, f"lists({elements.label})")
+
+
+st = strategies
+
+
+def settings(**kw):
+    """Records hypothesis settings; only ``max_examples`` is honored."""
+
+    def deco(fn):
+        setattr(fn, "_compat_settings", dict(kw))
+        return fn
+
+    return deco
+
+
+def given(**strats: Strategy):
+    """Run the wrapped test over deterministic seeded draws.
+
+    The PRNG seed mixes the test name and the draw index, so every run (and
+    every machine) exercises the identical example set.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_compat_settings",
+                           getattr(fn, "_compat_settings", {}))
+            n = min(int(conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)),
+                    _DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(max(n, 1)):
+                rng = random.Random(base ^ (0x9E3779B9 * (i + 1)))
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (draw {i}): {drawn!r}") from e
+
+        # hide the strategy params from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature(
+            [p for name, p in
+             inspect.signature(fn).parameters.items() if name not in strats])
+        wrapper.hypothesis_compat = True
+        return wrapper
+
+    return deco

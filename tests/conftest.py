@@ -1,0 +1,12 @@
+"""Make ``python -m pytest`` work from the repo root with no environment
+setup: puts ``src`` (the repro package) and this directory (the
+``_hypothesis_compat`` shim) on ``sys.path`` before collection."""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.abspath(os.path.join(_HERE, "..", "src"))
+
+for _p in (_SRC, _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

@@ -3,7 +3,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dependency-light env: seeded spot-checks instead
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import confidence_sampling as CS
 from repro.core import mappo

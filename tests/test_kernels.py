@@ -4,7 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dependency-light env: seeded spot-checks instead
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.gemm import GemmConfig, gemm_config_from_knobs
