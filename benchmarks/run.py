@@ -109,13 +109,13 @@ def _measurements_to_reach(run: Dict, slack: float) -> int:
 def bench_fig4():
     """Measured-configuration quality over time, with vs without CS
     (Fig. 4 analog) — run fresh (needs the CS ablation flag)."""
+    from repro.compiler import Session, TuningTask
     from repro.core.design_space import DesignSpace
-    from repro.core.tuner import arco_tune
     wl = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
-    space = DesignSpace.for_conv2d(wl)
+    task = TuningTask.from_space("fig4", DesignSpace.for_conv2d(wl))
     cfg = TR.tuner_config()
-    r_cs = arco_tune(space, cfg, use_cs=True)
-    r_nocs = arco_tune(space, cfg, use_cs=False)
+    r_cs = Session(task, tuner=cfg, use_cs=True).run().single
+    r_nocs = Session(task, tuner=cfg, use_cs=False).run().single
     for tag, r in (("with_cs", r_cs), ("without_cs", r_nocs)):
         lats = np.asarray([l for _, l in r.measurements])
         lats = lats[np.isfinite(lats) & (lats < 1e6)]

@@ -11,19 +11,19 @@ from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Dict, List
+from typing import Dict
 
-import numpy as np
-
+from repro.compiler import Session, TuningTask
 from repro.core import mappo
-from repro.core.baselines import autotvm_tune, chameleon_tune, random_tune
 from repro.core.task import Task, conv_tasks
-from repro.core.tuner import TunerConfig, arco_tune
+from repro.core.tuner import TunerConfig
 from repro.models import cnn
 
 ART = os.environ.get("REPRO_ART", "artifacts/tuning")
 PAPER = os.environ.get("REPRO_PAPER", "0") == "1"
+# bump when the per-run row schema changes (2: TuneReport.to_dict rows,
+# wall_time_s instead of wall_s) — stale caches are re-tuned, not crashed on
+SWEEP_SCHEMA = 2
 
 NETWORKS = list(cnn.MODELS)
 FRAMEWORKS = ("autotvm", "chameleon", "arco")
@@ -53,17 +53,11 @@ def unique_tasks() -> Dict[str, Task]:
 
 
 def _tune(framework: str, space, cfg: TunerConfig):
-    fn = {"arco": arco_tune, "autotvm": autotvm_tune,
-          "chameleon": chameleon_tune, "random": random_tune}[framework]
-    t0 = time.perf_counter()
-    r = fn(space, cfg)
-    wall = time.perf_counter() - t0
-    return {"best_latency": r.best_latency,
-            "n_measurements": r.n_measurements,
-            "wall_s": wall,
-            "history": r.history,
-            "measurements": r.measurements,
-            "best_config": np.asarray(r.best_config).tolist()}
+    """One framework on one task via the session API; the typed report is
+    JSON-serializable end-to-end (no hand re-packing)."""
+    task = TuningTask.from_space("bench", space)
+    report = Session(task, tuner=cfg, algo=framework).run().single
+    return report.to_dict()
 
 
 def run_sweep(force: bool = False) -> Dict:
@@ -71,11 +65,15 @@ def run_sweep(force: bool = False) -> Dict:
     path = os.path.join(ART, f"sweep_{'paper' if PAPER else 'default'}.json")
     if os.path.exists(path) and not force:
         with open(path) as f:
-            return json.load(f)
+            sweep = json.load(f)
+        if sweep.get("config", {}).get("schema") == SWEEP_SCHEMA:
+            return sweep
+        print(f"sweep cache {path} has an old schema; re-tuning", flush=True)
     cfg = tuner_config()
     tasks = unique_tasks()
     out: Dict[str, Dict] = {"tasks": {}, "config": {
-        "budget": cfg.iteration_opt * cfg.b_measure, "paper": PAPER}}
+        "budget": cfg.iteration_opt * cfg.b_measure, "paper": PAPER,
+        "schema": SWEEP_SCHEMA}}
     for i, (key, task) in enumerate(tasks.items()):
         wl = task.space.workload
         entry = {"workload": wl}
@@ -110,7 +108,7 @@ def network_results(sweep: Dict) -> Dict[str, Dict[str, float]]:
                 continue
             seen.add(key)
             for fw in FRAMEWORKS:
-                wall[fw] += sweep["tasks"][key][fw]["wall_s"]
+                wall[fw] += sweep["tasks"][key][fw]["wall_time_s"]
         out[net] = {"latency": res, "tuning_wall_s": wall}
     return out
 

@@ -1,20 +1,25 @@
 """Paper end-to-end flow: tune every ResNet-18 conv task, compare ARCO vs
 the software-only baselines (Table 6 / Fig. 5 protocol at reduced budget).
 
+One multi-task tuning session per framework: ARCO interleaves all tasks
+over a *shared* GBT cost model (cross-task transfer via the workload
+descriptor features), the baselines run the same tasks at the same budget.
+
     PYTHONPATH=src python examples/tune_resnet18.py [--budget 256]
 """
 import argparse
-import time
 
+from repro.compiler import Session, TuningTask
 from repro.core import mappo
-from repro.core.baselines import autotvm_tune, chameleon_tune
-from repro.core.task import conv_tasks, network_latency
-from repro.core.tuner import TunerConfig, arco_tune
+from repro.core.tuner import TunerConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", type=int, default=192)
+    ap.add_argument("--records", default=None,
+                    help="JSONL records prefix; one file per framework so "
+                         "no framework warm-starts from another's cache")
     args = ap.parse_args()
 
     n_iter = max(args.budget // 32, 2)
@@ -22,22 +27,19 @@ def main():
                       episodes_per_iter=3,
                       mappo=mappo.MappoConfig(n_steps=64, n_envs=16),
                       gbt_rounds=20)
-    tasks = conv_tasks("resnet-18")
-    print(f"ResNet-18: {sum(t.multiplicity for t in tasks)} conv layers, "
+    tasks = TuningTask.conv_tasks("resnet-18")
+    mult = {t.name: t.multiplicity for t in tasks}
+    print(f"ResNet-18: {sum(mult.values())} conv layers, "
           f"{len(tasks)} unique tuning tasks, "
           f"budget {args.budget} measurements/task\n")
 
-    frameworks = {"arco": arco_tune, "autotvm": autotvm_tune,
-                  "chameleon": chameleon_tune}
     totals, walls = {}, {}
-    for fw, tune in frameworks.items():
-        t0 = time.time()
-        best = {}
-        for t in tasks:
-            r = tune(t.space, cfg)
-            best[t.name] = r.best_latency
-        totals[fw] = network_latency(tasks, best)
-        walls[fw] = time.time() - t0
+    for fw in ("arco", "autotvm", "chameleon"):
+        records = args.records and f"{args.records}.{fw}.jsonl"
+        sr = Session(tasks, tuner=cfg, algo=fw, budget=args.budget,
+                     records=records).run()
+        totals[fw] = sr.total_best_latency(mult)
+        walls[fw] = sr.wall_time_s
         print(f"{fw:10s} network conv latency "
               f"{totals[fw] * 1e6:10.1f} us   tuning wall {walls[fw]:6.1f}s")
 

@@ -1,0 +1,99 @@
+"""Command-line entry point for tuning sessions.
+
+    # two ResNet-18 conv cells, shared GBT, 2-measurement smoke budget
+    PYTHONPATH=src python -m repro.compiler.cli \
+        --model resnet-18 --max-tasks 2 --budget 2
+
+    # one GEMM, AutoTVM baseline, persisted + resumable records
+    PYTHONPATH=src python -m repro.compiler.cli \
+        --matmul 512x512x512 --algo autotvm --budget 64 \
+        --records artifacts/gemm.jsonl
+
+    # pod-level compile oracle (expensive: one SPMD compile per measurement)
+    PYTHONPATH=src python -m repro.compiler.cli \
+        --arch qwen2-1.5b --shape train_4k --oracle compile --budget 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from repro.compiler.session import ALGOS, Session
+from repro.compiler.task import TuningTask
+from repro.core.tuner import TunerConfig
+
+
+def _tasks_from_args(args) -> List[TuningTask]:
+    picked = [bool(args.model), bool(args.matmul), bool(args.arch)]
+    if sum(picked) != 1:
+        raise SystemExit("pick exactly one of --model / --matmul / --arch")
+    if args.oracle == "compile" and not args.arch:
+        raise SystemExit("--oracle compile requires --arch/--shape "
+                         "(conv/GEMM tasks are measured analytically)")
+    if args.model:
+        tasks = TuningTask.conv_tasks(args.model)
+        return tasks[:args.max_tasks] if args.max_tasks else tasks
+    if args.matmul:
+        tasks = []
+        for spec in args.matmul:
+            m, n, k = (int(x) for x in spec.lower().split("x"))
+            tasks.append(TuningTask.matmul(m, n, k))
+        return tasks
+    if args.oracle != "compile":
+        raise SystemExit("--arch/--shape needs --oracle compile")
+    return [TuningTask.cell(args.arch, s) for s in args.shape]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.compiler.cli",
+        description="Unified tuning session over conv/GEMM analytical tasks "
+                    "or pod-level compile cells.")
+    ap.add_argument("--model", help="CNN model: tune its conv tasks "
+                                    "(e.g. resnet-18)")
+    ap.add_argument("--max-tasks", type=int, default=0,
+                    help="cap the number of conv tasks (0 = all)")
+    ap.add_argument("--matmul", action="append", default=[],
+                    metavar="MxNxK", help="GEMM task (repeatable)")
+    ap.add_argument("--arch", help="LM arch for the compile oracle")
+    ap.add_argument("--shape", action="append", default=[],
+                    help="cell shape(s) for --arch (default train_4k)")
+    ap.add_argument("--oracle", choices=("analytical", "compile"),
+                    default="analytical")
+    ap.add_argument("--algo", choices=ALGOS, default="arco")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="measurements per task")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-cs", action="store_true",
+                    help="ablate Confidence Sampling")
+    ap.add_argument("--independent", action="store_true",
+                    help="per-task GBT instead of the shared cost model")
+    ap.add_argument("--records", default=None,
+                    help="JSONL measurement records (persist + warm resume)")
+    ap.add_argument("--out", default=None, help="write session JSON here")
+    args = ap.parse_args(argv)
+    if args.arch and not args.shape:
+        args.shape = ["train_4k"]
+
+    tasks = _tasks_from_args(args)
+    session = Session(tasks, tuner=TunerConfig.fast(), algo=args.algo,
+                      budget=args.budget, use_cs=not args.no_cs,
+                      share_cost_model=not args.independent,
+                      records=args.records, seed=args.seed)
+    result = session.run()
+
+    summary = result.to_dict()
+    for rep in summary["reports"].values():  # keep stdout compact
+        rep.pop("measurements", None)
+        rep["history"] = rep["history"][-3:]
+    print(json.dumps(summary, indent=1, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result.to_dict(), f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,196 @@
+"""Measurement oracles — the single seam every tuner measures through.
+
+The protocol is ``measure(configs) -> (latencies, features)`` over int
+choice-index configurations.  The base class owns the cross-cutting
+concerns that were previously duplicated between ``core.tuner`` and
+``launch.autotune``: memoization (keyed on the config tuple), JSONL record
+persistence (via :class:`repro.compiler.records.RecordLog`), hit/miss/
+failure accounting, and the failed-measurement penalty.
+
+Two concrete oracles:
+
+* :class:`AnalyticalOracle` — batched analytical TPU simulator
+  (``DesignSpace.measure``), the paper's VTA++-simulator analog.
+* :class:`CompileOracle` — one SPMD lower + compile + roofline per
+  measurement (absorbs ``launch.autotune.compile_and_analyze``), the
+  expensive-oracle regime Confidence Sampling targets.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler.records import RecordLog
+from repro.core.design_space import DesignSpace
+
+
+def decode_config(space: DesignSpace, config) -> Dict[str, object]:
+    """Choice indices -> human-readable knob settings for ``space``."""
+    vals = np.asarray([space.choices[k][int(config[k])]
+                       for k in range(space.n_knobs)], np.float64)
+    from repro.core.shard_space import ShardSpace, knob_values_to_settings
+    if isinstance(space, ShardSpace):
+        return knob_values_to_settings(vals)
+    return {name: int(v) for name, v in zip(space.knob_names, vals)}
+
+
+class Oracle:
+    """Memoizing, record-persisting measurement oracle (protocol base).
+
+    Subclasses implement ``_measure_batch(configs) -> (lat, feats, extras)``
+    for cache misses; everything else — dedup, cache fill, JSONL rows,
+    stats — is shared here.
+    """
+
+    penalty_latency = 1e6  # recorded for measurements that raise
+
+    def __init__(self, space: DesignSpace, task: str = "",
+                 records: Optional[RecordLog] = None):
+        self.space = space
+        self.task = task or "task"
+        self.records = records
+        self.hits = 0
+        self.misses = 0
+        self.failures = 0
+        self._cache: Dict[Tuple[int, ...], Tuple[float, np.ndarray]] = {}
+        if records is not None:
+            for row in records.load(task=self.task):
+                key = tuple(int(x) for x in row["config"])
+                self._cache[key] = (float(row["latency"]),
+                                    np.asarray(row["features"], np.float32))
+
+    # ------------------------------------------------------------- protocol
+    def measure(self, configs) -> Tuple[np.ndarray, np.ndarray]:
+        """(n, n_knobs) choice indices -> (latencies (n,), features (n, F))."""
+        configs = np.asarray(configs).reshape(-1, self.space.n_knobs)
+        keys = [tuple(int(x) for x in c) for c in configs]
+        miss_idx, pending = [], set()
+        for i, k in enumerate(keys):
+            if k not in self._cache and k not in pending:
+                miss_idx.append(i)
+                pending.add(k)
+        if miss_idx:
+            lat, feats, extras = self._measure_batch(configs[miss_idx])
+            for j, i in enumerate(miss_idx):
+                self._remember(keys[i], float(lat[j]),
+                               np.asarray(feats[j], np.float32),
+                               extras[j] if extras else None)
+        self.misses += len(miss_idx)
+        self.hits += len(keys) - len(miss_idx)
+        lat = np.asarray([self._cache[k][0] for k in keys], np.float64)
+        feats = np.stack([self._cache[k][1] for k in keys])
+        return lat, feats
+
+    def _measure_batch(self, configs: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray, Optional[List]]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ internals
+    def _remember(self, key: Tuple[int, ...], lat: float, feats: np.ndarray,
+                  extra: Optional[Dict]) -> None:
+        self._cache[key] = (lat, feats)
+        if self.records is not None:
+            row = {"task": self.task, "config": list(key), "latency": lat,
+                   "features": [float(x) for x in feats]}
+            if extra:
+                row.update(extra)
+            self.records.append(row)
+
+    @property
+    def seen(self):
+        """Keys of every memoized configuration (incl. resumed records)."""
+        return self._cache.keys()
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cache)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "failures": self.failures, "cached": self.n_cached}
+
+    def features(self, configs) -> np.ndarray:
+        return np.asarray(self.space.feature_vector(
+            jnp.asarray(np.asarray(configs), jnp.int32)), np.float32)
+
+
+class AnalyticalOracle(Oracle):
+    """Batched analytical simulator oracle over ``space.measure`` (also
+    covers :class:`~repro.core.shard_space.ShardSpace` instances that carry
+    their own python ``measure_fn``, e.g. mock oracles in tests)."""
+
+    def _measure_batch(self, configs):
+        c = jnp.asarray(configs, jnp.int32)
+        lat = np.asarray(self.space.measure(c), np.float64)
+        return lat, self.features(configs), None
+
+
+class SettingsOracle(Oracle):
+    """Per-config oracle over decoded knob *settings* with failure penalty.
+
+    ``fn(settings)`` returns either a latency float or a result dict with a
+    ``step_penalized_s`` entry.  A raising measurement records the hinge
+    ``penalty_latency`` plus the error string — an infeasible configuration
+    must never win the search, but the surrogate still learns from it.
+    """
+
+    def __init__(self, space: DesignSpace, fn: Callable[[Dict], object],
+                 task: str = "", records: Optional[RecordLog] = None,
+                 verbose: bool = False):
+        self.fn = fn
+        self.verbose = verbose
+        super().__init__(space, task=task, records=records)
+
+    _RESULT_KEYS = ("step_s", "compile_s", "hbm_residency_gib", "feasible",
+                    "dominant")
+
+    def _measure_batch(self, configs):
+        feats = self.features(configs)
+        lats = np.empty(len(configs), np.float64)
+        extras: List[Dict] = []
+        for i, cfg in enumerate(configs):
+            settings = decode_config(self.space, cfg)
+            extra: Dict[str, object] = {"settings": settings}
+            try:
+                out = self.fn(settings)
+                if isinstance(out, dict):
+                    lats[i] = float(out["step_penalized_s"])
+                    extra["result"] = {k: out[k] for k in self._RESULT_KEYS
+                                       if k in out}
+                else:
+                    lats[i] = float(out)
+            except Exception as e:  # infeasible configuration
+                self.failures += 1
+                lats[i] = self.penalty_latency
+                extra["error"] = f"{type(e).__name__}: {e}"[:300]
+                if self.verbose:
+                    print(f"  measure {settings}: FAILED {extra['error'][:140]}",
+                          flush=True)
+            extras.append(extra)
+        return lats, feats, extras
+
+
+class CompileOracle(SettingsOracle):
+    """Pod-level compile oracle: lower + compile + roofline one LM cell per
+    measurement (absorbs the old ``launch.autotune.make_measurer``)."""
+
+    def __init__(self, arch: str, shape: str, n_devices: Optional[int] = None,
+                 task: str = "", records: Optional[RecordLog] = None,
+                 verbose: bool = True,
+                 space: Optional[DesignSpace] = None):
+        if space is None:
+            import jax
+            from repro.core.shard_space import ShardSpace
+            space = ShardSpace.for_cell(
+                arch, shape, measure_fn=None,
+                n_devices=n_devices or len(jax.devices()))
+        self.arch, self.shape = arch, shape
+
+        def fn(settings: Dict[str, object]) -> Dict[str, object]:
+            from repro.launch.autotune import compile_and_analyze
+            return compile_and_analyze(arch, shape, settings, verbose=verbose)
+
+        super().__init__(space, fn, task=task or f"{arch}/{shape}",
+                         records=records, verbose=verbose)

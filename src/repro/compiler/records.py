@@ -1,0 +1,51 @@
+"""JSONL measurement records — the persistence layer of a tuning session.
+
+One row per *new* oracle measurement:
+
+    {"task": "...", "config": [idx, ...], "latency": 1.2e-4,
+     "features": [...18 floats...], ...extras...}
+
+Extras carry decoded ``settings`` (shard-space oracles), compact compile
+``result`` summaries, or an ``error`` string for failed measurements.  A
+session pointed at an existing record file resumes *warm*: every oracle
+primes its memo cache from the rows matching its task, so re-running the
+same session replays from cache instead of re-paying oracle cost, and a
+larger budget continues the search where the file left off.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+
+class RecordLog:
+    """Append-only JSONL file of oracle measurements (shared across tasks)."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def load(self, task: Optional[str] = None) -> List[Dict]:
+        """All persisted rows (optionally filtered to one task)."""
+        if not self.exists():
+            return []
+        rows: List[Dict] = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                if task is None or row.get("task") == task:
+                    rows.append(row)
+        return rows
+
+    def append(self, row: Dict) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(row) + "\n")

@@ -1,0 +1,175 @@
+"""Tuning sessions — one API over both tuning stacks.
+
+A :class:`Session` runs ARCO or any baseline over *one or many*
+:class:`~repro.compiler.task.TuningTask`\\ s:
+
+* every measurement routes through one memoizing, record-persisting
+  :class:`~repro.compiler.oracle.Oracle`;
+* with ``share_cost_model=True`` (default) all tasks feed **one** GBT
+  surrogate — cross-task transfer via the cell-descriptor half of the
+  feature vector (Algorithm 1's refit step, batched over cells);
+* ``records=<path.jsonl>`` persists every measurement and resumes warm:
+  re-running the same session replays from cache, a larger budget
+  continues the search without re-paying oracle cost;
+* the result is a typed :class:`SessionReport` of per-task
+  :class:`~repro.compiler.report.TuneReport`\\ s.
+
+Quickstart::
+
+    from repro.compiler import Session, TuningTask
+    rep = Session(TuningTask.matmul(512, 512, 512), budget=64).run().single
+    reports = Session(TuningTask.conv_tasks("resnet-18")[:3],
+                      budget=128, records="artifacts/r18.jsonl").run()
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, Optional, Union
+
+from repro.compiler.records import RecordLog
+from repro.compiler.report import TuneReport
+from repro.compiler.task import TuningTask
+from repro.core.cost_model import GBTModel
+from repro.core.tuner import ArcoLoop, TunerConfig
+
+ALGOS = ("arco", "random", "autotvm", "chameleon")
+
+
+@dataclasses.dataclass
+class SessionReport:
+    """Typed result of one session: per-task reports + run metadata."""
+
+    reports: Dict[str, TuneReport]
+    wall_time_s: float
+    algo: str
+    shared_cost_model: bool
+    budget_per_task: int
+
+    @property
+    def single(self) -> TuneReport:
+        """The sole report of a single-task session."""
+        if len(self.reports) != 1:
+            raise ValueError(f"session tuned {len(self.reports)} tasks; "
+                             "use report['name']")
+        return next(iter(self.reports.values()))
+
+    def __getitem__(self, name: str) -> TuneReport:
+        return self.reports[name]
+
+    def __iter__(self):
+        return iter(self.reports.values())
+
+    def total_best_latency(self,
+                           multiplicity: Optional[Dict[str, int]] = None
+                           ) -> float:
+        """Sum of per-task best latencies (optionally layer-weighted)."""
+        mult = multiplicity or {}
+        return sum(r.best_latency * mult.get(name, 1)
+                   for name, r in self.reports.items())
+
+    def to_dict(self) -> Dict:
+        return {"algo": self.algo, "shared_cost_model": self.shared_cost_model,
+                "budget_per_task": self.budget_per_task,
+                "wall_time_s": self.wall_time_s,
+                "reports": {n: r.to_dict() for n, r in self.reports.items()}}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "SessionReport":
+        return SessionReport(
+            reports={n: TuneReport.from_dict(r)
+                     for n, r in d["reports"].items()},
+            wall_time_s=d["wall_time_s"], algo=d["algo"],
+            shared_cost_model=d["shared_cost_model"],
+            budget_per_task=d["budget_per_task"])
+
+
+class Session:
+    """One tuning run over one or many tasks with a shared cost model."""
+
+    def __init__(self, tasks: Union[TuningTask, Iterable[TuningTask]],
+                 tuner: Optional[TunerConfig] = None, algo: str = "arco",
+                 budget: Optional[int] = None, use_cs: bool = True,
+                 share_cost_model: bool = True,
+                 records: Union[None, str, RecordLog] = None,
+                 seed: Optional[int] = None):
+        if isinstance(tasks, TuningTask):
+            tasks = [tasks]
+        self.tasks = list(tasks)
+        if not self.tasks:
+            raise ValueError("Session needs at least one task")
+        names = [t.name for t in self.tasks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate task names: {names}")
+        if algo not in ALGOS:
+            raise ValueError(f"unknown algo {algo!r}; have {ALGOS}")
+        cfg = tuner or TunerConfig()
+        if seed is not None:
+            cfg = dataclasses.replace(cfg, seed=seed)
+        self.cfg = cfg
+        self.algo = algo
+        self.budget = budget or cfg.iteration_opt * cfg.b_measure
+        self.use_cs = use_cs
+        self.share_cost_model = share_cost_model
+        self.records = (RecordLog(records) if isinstance(records, str)
+                        else records)
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> SessionReport:
+        t0 = time.perf_counter()
+        shared_gbt = (GBTModel(n_rounds=self.cfg.gbt_rounds,
+                               seed=self.cfg.seed)
+                      if self.share_cost_model else None)
+        if self.algo == "arco":
+            reports = self._run_arco(shared_gbt)
+        else:
+            reports = self._run_baseline(shared_gbt)
+        return SessionReport(reports=reports,
+                             wall_time_s=time.perf_counter() - t0,
+                             algo=self.algo,
+                             shared_cost_model=self.share_cost_model,
+                             budget_per_task=self.budget)
+
+    def _run_arco(self, shared_gbt: Optional[GBTModel]
+                  ) -> Dict[str, TuneReport]:
+        """Interleaved ARCO: one iteration per task per round, every task
+        refitting the same surrogate when the cost model is shared."""
+        loops = [
+            ArcoLoop(t.space, self.cfg,
+                     oracle=t.make_oracle(self.records),
+                     gbt=shared_gbt if shared_gbt is not None else GBTModel(
+                         n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed),
+                     use_cs=self.use_cs, task=t.name)
+            for t in self.tasks]
+        for loop in loops:
+            loop.seed(self.budget)
+        progressed = True
+        while progressed:
+            progressed = False
+            for loop in loops:
+                if loop.exhausted or loop.track.count >= self.budget:
+                    continue
+                if loop.step(self.budget):
+                    progressed = True
+        return {t.name: loop.report()
+                for t, loop in zip(self.tasks, loops)}
+
+    def _run_baseline(self, shared_gbt: Optional[GBTModel]
+                      ) -> Dict[str, TuneReport]:
+        """Baselines run sequentially per task; GBT-based ones still share
+        the surrogate across tasks when the cost model is shared."""
+        from repro.core import baselines as B
+        reports: Dict[str, TuneReport] = {}
+        for t in self.tasks:
+            oracle = t.make_oracle(self.records)
+            kw = dict(cfg=self.cfg, budget=self.budget, oracle=oracle,
+                      task=t.name)
+            if self.algo == "random":
+                reports[t.name] = B.random_tune(t.space, **kw)
+            elif self.algo == "autotvm":
+                reports[t.name] = B.autotvm_tune(t.space, gbt=shared_gbt,
+                                                 **kw)
+            else:
+                reports[t.name] = B.chameleon_tune(t.space, gbt=shared_gbt,
+                                                   **kw)
+        return reports

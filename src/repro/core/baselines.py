@@ -14,7 +14,6 @@ only method allowed to co-optimize the hardware knobs.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import List, Optional, Tuple
 
@@ -22,11 +21,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compiler.oracle import AnalyticalOracle, Oracle
+from repro.compiler.report import Tracker, TuneReport
 from repro.core import agents as A
 from repro.core import cost_model as CM
 from repro.core import mappo
 from repro.core.design_space import (AGENT_KNOBS, DesignSpace, N_KNOBS)
-from repro.core.tuner import TuneResult, TunerConfig, _measure, _Tracker
+from repro.core.tuner import TunerConfig, unique_seed_batch
 
 HW_KNOBS = np.asarray(AGENT_KNOBS["hardware"])
 
@@ -65,28 +66,40 @@ def _random_configs(space: DesignSpace, rng: np.random.Generator, n: int,
     return np.unique(out, axis=0)
 
 
+def _seed_configs(space: DesignSpace, rng: np.random.Generator, n: int,
+                  frozen: Optional[np.ndarray] = None,
+                  base: Optional[np.ndarray] = None) -> np.ndarray:
+    """Exactly ``n`` distinct seed configs over the *unfrozen* knobs (space
+    permitting) — same equal-seed-budget contract as ``ArcoLoop.seed``."""
+    free = int(np.prod([len(c) for i, c in enumerate(space.choices)
+                        if frozen is None or not frozen[i]]))
+    return unique_seed_batch(
+        lambda m: _random_configs(space, rng, m, frozen, base), n, free)
+
+
 # --------------------------------------------------------------------------
 # Random search
 # --------------------------------------------------------------------------
 
 def random_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
-                budget: Optional[int] = None) -> TuneResult:
+                budget: Optional[int] = None,
+                oracle: Optional[Oracle] = None,
+                task: str = "") -> TuneReport:
     rng = np.random.default_rng(cfg.seed)
+    oracle = oracle or AnalyticalOracle(space, task=task)
     frozen, base = frozen_mask_and_base(space)
-    track = _Tracker()
+    track = Tracker(task)
     budget = budget or cfg.iteration_opt * cfg.b_measure
-    measured = set()
     while track.count < budget:
         n = min(cfg.b_measure, budget - track.count)
         cand = _random_configs(space, rng, 2 * n, frozen, base)
-        cand = np.asarray([c for c in cand if tuple(c) not in measured])
+        cand = np.asarray([c for c in cand if track.is_new(c)])
         if len(cand) == 0:
             break
         cand = cand[:n]
-        measured.update(tuple(c) for c in cand)
-        lat, _ = _measure(space, cand)
+        lat, _ = oracle.measure(cand)
         track.record(cand, lat)
-    return track.result()
+    return track.report(oracle=oracle)
 
 
 # --------------------------------------------------------------------------
@@ -131,22 +144,27 @@ def _sa_search(rng, env: mappo.EnvParams, forest: CM.Forest,
 def autotvm_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
                  budget: Optional[int] = None,
                  n_chains: int = 64, sa_steps: Optional[int] = None,
-                 eps_greedy: float = 0.1) -> TuneResult:
+                 eps_greedy: float = 0.1,
+                 oracle: Optional[Oracle] = None,
+                 gbt: Optional[CM.GBTModel] = None,
+                 task: str = "") -> TuneReport:
     rng = jax.random.PRNGKey(cfg.seed)
     np_rng = np.random.default_rng(cfg.seed)
     env = mappo.env_params_from_space(space)
-    gbt = CM.GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+    oracle = oracle or AnalyticalOracle(space, task=task)
+    gbt = gbt if gbt is not None else CM.GBTModel(n_rounds=cfg.gbt_rounds,
+                                                  seed=cfg.seed)
     frozen_np, base = frozen_mask_and_base(space)
     frozen = jnp.asarray(frozen_np)
-    track = _Tracker()
+    track = Tracker(task)
     budget = budget or cfg.iteration_opt * cfg.b_measure
     sa_steps = sa_steps or cfg.mappo.n_steps  # matched search effort
 
-    seed_cfgs = _random_configs(space, np_rng, cfg.b_measure, frozen_np, base)
-    lat, feats = _measure(space, seed_cfgs)
+    seed_cfgs = _seed_configs(space, np_rng, min(cfg.b_measure, budget),
+                              frozen_np, base)
+    lat, feats = oracle.measure(seed_cfgs)
     track.record(seed_cfgs, lat)
     gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-    measured = {tuple(c) for c in seed_cfgs}
 
     while track.count < budget:
         forest = gbt.to_forest()
@@ -161,7 +179,7 @@ def autotvm_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
         n_meas = min(cfg.b_measure, budget - track.count)
         n_rand = int(n_meas * eps_greedy)
         cand: List[np.ndarray] = []
-        seen = set(measured)
+        seen = set(track.seen)
         for i in order:
             t = tuple(visited[i])
             if t not in seen:
@@ -179,11 +197,10 @@ def autotvm_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
         if not cand:  # software knob space exhausted
             break
         cand_np = np.asarray(cand[:n_meas]).reshape(-1, N_KNOBS)
-        lat, feats = _measure(space, cand_np)
+        lat, feats = oracle.measure(cand_np)
         track.record(cand_np, lat)
-        measured.update(tuple(c) for c in cand_np)
         gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-    return track.result()
+    return track.report(oracle=oracle)
 
 
 # --------------------------------------------------------------------------
@@ -270,26 +287,30 @@ def _kmeans(X: np.ndarray, k: int, rng: np.random.Generator,
 
 
 def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
-                   budget: Optional[int] = None) -> TuneResult:
+                   budget: Optional[int] = None,
+                   oracle: Optional[Oracle] = None,
+                   gbt: Optional[CM.GBTModel] = None,
+                   task: str = "") -> TuneReport:
     rng = jax.random.PRNGKey(cfg.seed)
     np_rng = np.random.default_rng(cfg.seed)
     env = mappo.env_params_from_space(space)
     params = _init_single_agent(rng)
     from repro.optim.adam import Adam
     opt_state = Adam(lr=cfg.mappo.lr, grad_clip_norm=1.0).init(params)
-    gbt = CM.GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+    oracle = oracle or AnalyticalOracle(space, task=task)
+    gbt = gbt if gbt is not None else CM.GBTModel(n_rounds=cfg.gbt_rounds,
+                                                  seed=cfg.seed)
     frozen_np, base_np = frozen_mask_and_base(space)
     frozen = jnp.asarray(frozen_np)
     base = jnp.asarray(base_np, jnp.int32)
-    track = _Tracker()
+    track = Tracker(task)
     budget = budget or cfg.iteration_opt * cfg.b_measure
 
-    seed_cfgs = _random_configs(space, np_rng, cfg.b_measure, frozen_np,
-                                base_np)
-    lat, feats = _measure(space, seed_cfgs)
+    seed_cfgs = _seed_configs(space, np_rng, min(cfg.b_measure, budget),
+                              frozen_np, base_np)
+    lat, feats = oracle.measure(seed_cfgs)
     track.record(seed_cfgs, lat)
     gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-    measured = {tuple(c) for c in seed_cfgs}
 
     it = 0
     while track.count < budget:
@@ -302,12 +323,11 @@ def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
                 params, opt_state, r_ep, env, forest, frozen, base, cfg.mappo)
             pool.append(np.asarray(visited))
         pool_np = np.unique(np.concatenate(pool), axis=0)
-        pool_np = np.asarray([c for c in pool_np if tuple(c) not in measured])
+        pool_np = np.asarray([c for c in pool_np if track.is_new(c)])
         if len(pool_np) == 0:
             pool_np = _random_configs(space, np_rng, cfg.b_measure, frozen_np,
                                       base_np)
-            pool_np = np.asarray([c for c in pool_np
-                                  if tuple(c) not in measured])
+            pool_np = np.asarray([c for c in pool_np if track.is_new(c)])
         if len(pool_np) == 0:  # software knob space exhausted
             break
         n_meas = min(cfg.b_measure, budget - track.count)
@@ -315,8 +335,7 @@ def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
         # representative nearest each centroid.
         reps = _kmeans(pool_np.astype(np.float64), n_meas, np_rng)
         cand = pool_np[reps][:n_meas].reshape(-1, N_KNOBS)
-        lat, feats = _measure(space, cand)
+        lat, feats = oracle.measure(cand)
         track.record(cand, lat)
-        measured.update(tuple(c) for c in cand)
         gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-    return track.result()
+    return track.report(oracle=oracle)

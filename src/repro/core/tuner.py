@@ -1,30 +1,41 @@
 """ARCO tuning loop — Fig. 2 / Algorithm 1 of the paper.
 
-Per tuning task (one conv layer / one GEMM):
+Per tuning task (one conv layer / one GEMM / one pod cell):
 
   repeat iteration_opt times:
     MARL exploration episodes (MAPPO, CTDE) against the GBT surrogate
     Confidence Sampling picks <= b_measure high-confidence configs
-    the measurement oracle (analytical TPU simulator) evaluates them
+    the measurement oracle evaluates them (memoized, record-persisted —
+    see ``repro.compiler.oracle``)
     the GBT cost model is refit on all measurements
 
 Total measurement budget matches the paper's setup:
 iteration_opt * b_measure ~ Sigma(b_GBT) = 1000 hardware measurements.
+
+The loop is exposed in stepwise form (:class:`ArcoLoop`: ``seed()`` +
+``step()``) so ``repro.compiler.Session`` can interleave several tasks over
+one *shared* GBT cost model (cross-task transfer via the cell-descriptor
+half of the feature vector); ``arco_tune`` is the single-task adapter.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compiler.oracle import AnalyticalOracle, Oracle, decode_config
+from repro.compiler.report import Tracker, TuneReport
 from repro.core import confidence_sampling as CS
 from repro.core import mappo
 from repro.core.cost_model import GBTModel
 from repro.core.design_space import DesignSpace, N_KNOBS
+
+# Backwards-compatible alias: the typed report replaced the old TuneResult.
+TuneResult = TuneReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,130 +63,148 @@ class TunerConfig:
                            gbt_rounds=16)
 
 
-@dataclasses.dataclass
-class TuneResult:
-    best_config: np.ndarray
-    best_latency: float
-    n_measurements: int
-    wall_time_s: float
-    # history rows: (measurement_count, best_latency_so_far, wall_time)
-    history: List[Tuple[int, float, float]]
-    # every measurement in order: (measurement_index, latency)
-    measurements: List[Tuple[int, float]]
-
-    def best_gflops(self, space: DesignSpace) -> float:
-        from repro.hw import analytical
-        if space.kind == "conv2d":
-            return analytical.conv2d_gflops(space.workload, self.best_latency)
-        m, n, k = (space.workload[d] for d in "mnk")
-        return 2.0 * m * n * k / self.best_latency / 1e9
+def unique_seed_batch(draw, n: int, space_size: int) -> np.ndarray:
+    """Exactly ``n`` distinct configs (space permitting) from repeated calls
+    to ``draw(n)``: unique-dedup may shrink a draw, so fresh draws top the
+    batch back up — every method consumes the same seed budget."""
+    out = np.unique(np.asarray(draw(n)), axis=0)
+    attempts = 0
+    while len(out) < min(n, space_size) and attempts < 16:
+        out = np.unique(np.concatenate([out, np.asarray(draw(n))]), axis=0)
+        attempts += 1
+    return out[:n]
 
 
-def _measure(space: DesignSpace, configs: np.ndarray
-             ) -> Tuple[np.ndarray, np.ndarray]:
-    """Oracle measurement + GBT feature extraction."""
-    c = jnp.asarray(configs, jnp.int32)
-    lat = np.asarray(space.measure(c))
-    feats = np.asarray(space.feature_vector(c))
-    return lat, feats
+class ArcoLoop:
+    """Stepwise ARCO on one task: MARL explore -> CS select -> measure ->
+    GBT refit.  Oracle and GBT are injectable so a session can share them."""
 
+    def __init__(self, space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+                 oracle: Optional[Oracle] = None,
+                 gbt: Optional[GBTModel] = None,
+                 use_cs: bool = True, task: str = ""):
+        self.space = space
+        self.cfg = cfg
+        self.use_cs = use_cs
+        self.oracle = oracle or AnalyticalOracle(space, task=task)
+        self.gbt = gbt if gbt is not None else GBTModel(
+            n_rounds=cfg.gbt_rounds, seed=cfg.seed)
+        self.track = Tracker(task)
+        self.rng = jax.random.PRNGKey(cfg.seed)
+        self.np_rng = np.random.default_rng(cfg.seed)
+        self.env = mappo.env_params_from_space(space)
+        self.params, self.opt_state = mappo.init_state(self.rng, cfg.mappo)
+        self.it = 0
+        self.exhausted = False
 
-class _Tracker:
-    """Shared bookkeeping for every tuner (ARCO + baselines)."""
+    # ------------------------------------------------------------ iteration 0
+    def seed(self, budget: Optional[int] = None) -> None:
+        """Seed the cost model with random measurements (all methods do this
+        — an untrained surrogate carries no signal)."""
+        t_start = time.perf_counter()
+        n = self.cfg.b_measure if budget is None else min(
+            self.cfg.b_measure, budget)
+        first = [True]
 
-    def __init__(self):
-        self.t0 = time.perf_counter()
-        self.best_lat = np.inf
-        self.best_cfg: Optional[np.ndarray] = None
-        self.count = 0
-        self.history: List[Tuple[int, float, float]] = []
-        self.measurements: List[Tuple[int, float]] = []
+        def draw(m):
+            if first[0]:  # first draw consumes self.rng unsplit, as before
+                first[0] = False
+                return self.space.random_configs(self.rng, m)
+            self.rng, r = jax.random.split(self.rng)
+            return self.space.random_configs(r, m)
 
-    def record(self, configs: np.ndarray, lats: np.ndarray):
-        for cfg, lat in zip(configs, lats):
-            self.count += 1
-            self.measurements.append((self.count, float(lat)))
-            if lat < self.best_lat:
-                self.best_lat = float(lat)
-                self.best_cfg = np.asarray(cfg)
-        self.history.append((self.count, self.best_lat,
-                             time.perf_counter() - self.t0))
+        cfgs = unique_seed_batch(draw, n, self.space.size)
+        lat, feats = self.oracle.measure(cfgs)
+        self.track.add_active(time.perf_counter() - t_start)
+        self.track.record(cfgs, lat)
+        t_fit = time.perf_counter()
+        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+        self.track.add_active(time.perf_counter() - t_fit)
 
-    def result(self) -> TuneResult:
-        return TuneResult(self.best_cfg, self.best_lat, self.count,
-                          time.perf_counter() - self.t0, self.history,
-                          self.measurements)
-
-
-def arco_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
-              budget: Optional[int] = None,
-              use_cs: bool = True) -> TuneResult:
-    """Tune one task with ARCO. ``budget`` caps total oracle measurements.
-
-    ``use_cs=False`` ablates Confidence Sampling (Fig. 4a): candidates are
-    drawn uniformly from the explored pool instead."""
-    rng = jax.random.PRNGKey(cfg.seed)
-    np_rng = np.random.default_rng(cfg.seed)
-    env = mappo.env_params_from_space(space)
-    params, opt_state = mappo.init_state(rng, cfg.mappo)
-    gbt = GBTModel(n_rounds=cfg.gbt_rounds, seed=cfg.seed)
-    track = _Tracker()
-    budget = budget or cfg.iteration_opt * cfg.b_measure
-
-    # Iteration 0 seeds the cost model with random measurements (all methods
-    # do this — an untrained surrogate carries no signal).
-    seed_cfgs = np.asarray(space.random_configs(rng, cfg.b_measure))
-    seed_cfgs = np.unique(seed_cfgs, axis=0)
-    lat, feats = _measure(space, seed_cfgs)
-    track.record(seed_cfgs, lat)
-    gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-
-    measured = {tuple(c) for c in seed_cfgs}
-    it = 0
-    while track.count < budget:
-        it += 1
-        forest = gbt.to_forest()
-        pool: List[np.ndarray] = []
-        for ep in range(cfg.episodes_per_iter):
-            rng, r_ep = jax.random.split(rng)
-            params, opt_state, visited, stats = mappo.train_episode(
-                params, opt_state, r_ep, env, forest, cfg.mappo)
+    # -------------------------------------------------------- one iteration
+    def step(self, budget: int) -> bool:
+        """One optimization iteration; returns False once the search space
+        is exhausted (nothing new to measure)."""
+        if self.exhausted or self.track.count >= budget:
+            return not self.exhausted
+        t_start = time.perf_counter()
+        self.it += 1
+        cfg = self.cfg
+        forest = self.gbt.to_forest()
+        pool = []
+        for _ in range(cfg.episodes_per_iter):
+            self.rng, r_ep = jax.random.split(self.rng)
+            self.params, self.opt_state, visited, _stats = \
+                mappo.train_episode(self.params, self.opt_state, r_ep,
+                                    self.env, forest, cfg.mappo)
             pool.append(np.asarray(visited))
         pool_np = np.unique(np.concatenate(pool), axis=0)
 
         # Confidence Sampling over the explored pool (critic-scored)
         scores = np.asarray(mappo.critic_scores(
-            params, env, jnp.asarray(pool_np, jnp.int32)))
-        n_meas = min(cfg.b_measure, budget - track.count)
-        if use_cs:
+            self.params, self.env, jnp.asarray(pool_np, jnp.int32)))
+        n_meas = min(cfg.b_measure, budget - self.track.count)
+        if self.use_cs:
             cand = CS.confidence_sampling(pool_np, scores, n_meas,
-                                          space.n_choices, seed=cfg.seed + it)
+                                          self.space.n_choices,
+                                          seed=cfg.seed + self.it)
         else:  # ablation: uniform sampling from the explored pool (Fig. 4a)
-            idx = np_rng.choice(len(pool_np), min(n_meas, len(pool_np)),
-                                replace=False)
+            idx = self.np_rng.choice(len(pool_np),
+                                     min(n_meas, len(pool_np)),
+                                     replace=False)
             cand = pool_np[idx]
-        # drop configs already measured; top up from the remaining pool
-        cand_list = [c for c in cand if tuple(c) not in measured]
+        # drop configs this run already measured; top up from the pool
+        cand_list = [c for c in cand if self.track.is_new(c)]
         if len(cand_list) < n_meas:
             seen = {tuple(c) for c in cand_list}
             for c in pool_np[np.argsort(-scores)]:
-                if tuple(c) not in measured and tuple(c) not in seen:
+                if self.track.is_new(c) and tuple(c) not in seen:
                     seen.add(tuple(c))
                     cand_list.append(c)
                 if len(cand_list) >= n_meas:
                     break
         if not cand_list:  # search space exhausted
-            break
+            self.exhausted = True
+            self.track.add_active(time.perf_counter() - t_start)
+            return False
         cand = np.asarray(cand_list[:n_meas], np.int64).reshape(-1, N_KNOBS)
 
-        lat, feats = _measure(space, cand)
-        track.record(cand, lat)
-        measured.update(tuple(c) for c in cand)
-        gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-    return track.result()
+        lat, feats = self.oracle.measure(cand)
+        self.track.add_active(time.perf_counter() - t_start)
+        self.track.record(cand, lat)
+        t_fit = time.perf_counter()
+        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+        self.track.add_active(time.perf_counter() - t_fit)
+        return True
+
+    # -------------------------------------------------------------- result
+    def report(self) -> TuneReport:
+        settings = (decode_config(self.space, self.track.best_cfg)
+                    if self.track.best_cfg is not None else None)
+        return self.track.report(oracle=self.oracle, best_settings=settings)
+
+
+def arco_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
+              budget: Optional[int] = None,
+              use_cs: bool = True,
+              oracle: Optional[Oracle] = None,
+              gbt: Optional[GBTModel] = None,
+              task: str = "") -> TuneReport:
+    """Tune one task with ARCO. ``budget`` caps total oracle measurements.
+
+    ``use_cs=False`` ablates Confidence Sampling (Fig. 4a): candidates are
+    drawn uniformly from the explored pool instead."""
+    budget = budget or cfg.iteration_opt * cfg.b_measure
+    loop = ArcoLoop(space, cfg, oracle=oracle, gbt=gbt, use_cs=use_cs,
+                    task=task)
+    loop.seed(budget)
+    while loop.track.count < budget:
+        if not loop.step(budget):
+            break
+    return loop.report()
 
 
 def tune_network(tasks: Dict[str, DesignSpace],
-                 tuner=arco_tune, **kw) -> Dict[str, TuneResult]:
+                 tuner=arco_tune, **kw) -> Dict[str, TuneReport]:
     """Tune every (deduplicated) task of a network; returns per-task results."""
     return {name: tuner(space, **kw) for name, space in tasks.items()}

@@ -14,7 +14,9 @@ if "--xla_force_host_platform_device_count" not in \
 # This is the beyond-paper §Perf engine: the same MAPPO+CS machinery from
 # the paper, pointed at the 256-chip execution configuration, where each
 # "hardware measurement" costs an SPMD compile (tens of seconds) — the cost
-# regime Confidence Sampling was designed for.
+# regime Confidence Sampling was designed for.  ``search`` is a thin adapter
+# over ``repro.compiler.Session`` + ``CompileOracle``; only the heavy
+# measurement itself (``compile_and_analyze``) lives here.
 
 import argparse
 import json
@@ -22,13 +24,11 @@ import time
 from typing import Dict
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, input_specs
 from repro.core import mappo
-from repro.core.shard_space import ShardSpace, knob_values_to_settings
-from repro.core.tuner import TunerConfig, arco_tune
+from repro.core.tuner import TunerConfig
 from repro.hw import hlo_analysis, roofline as RL
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
@@ -113,53 +113,32 @@ def compile_and_analyze(arch: str, shape_name: str,
     return out
 
 
-def make_measurer(arch: str, shape_name: str, log: list,
-                  verbose: bool = True):
-    cache: Dict[tuple, float] = {}
-
-    def measure(settings: Dict[str, object]) -> float:
-        key = tuple(sorted((k, str(v)) for k, v in settings.items()))
-        if key in cache:
-            return cache[key]
-        try:
-            res = compile_and_analyze(arch, shape_name, settings, verbose)
-            lat = float(res["step_penalized_s"])
-            log.append(res)
-        except Exception as e:  # infeasible configuration
-            if verbose:
-                print(f"  measure {settings}: FAILED "
-                      f"{type(e).__name__}: {str(e)[:120]}", flush=True)
-            lat = 1e6
-            log.append({"settings": dict(settings), "error": str(e)[:300]})
-        cache[key] = lat
-        return lat
-
-    return measure
-
-
 def search(arch: str, shape_name: str, budget: int = 14,
-           seed: int = 0, out_path: str = None):
-    log: list = []
-    measure = make_measurer(arch, shape_name, log)
-    space = ShardSpace.for_cell(arch, shape_name, measure,
-                                n_devices=len(jax.devices()))
+           seed: int = 0, out_path: str = None,
+           records_path: str = None):
+    """Thin adapter over the session API: one compile-oracle cell, measured
+    through ``CompileOracle``.  Re-measures from scratch unless the caller
+    opts into persistence with ``records_path`` (JSONL), from which a re-run
+    resumes warm — never derived implicitly, so a plain re-run after a code
+    or toolchain change always reflects fresh measurements."""
+    from repro.compiler import Session, TuningTask
     cfg = TunerConfig(
         iteration_opt=max(budget // 4, 2), b_measure=4,
         episodes_per_iter=2,
         mappo=mappo.MappoConfig(n_steps=32, n_envs=8), gbt_rounds=12,
         seed=seed)
-    result = arco_tune(space, cfg, budget=budget)
-    best_vals = np.asarray([space.choices[k][int(result.best_config[k])]
-                            for k in range(space.n_knobs)], np.float64)
-    best = knob_values_to_settings(best_vals)
+    task = TuningTask.cell(arch, shape_name, n_devices=len(jax.devices()))
+    result = Session(task, tuner=cfg, budget=budget,
+                     records=records_path).run().single
     summary = {
         "arch": arch, "shape": shape_name,
-        "best_settings": best,
+        "best_settings": result.best_settings,
         "best_step_s": result.best_latency,
         "n_measurements": result.n_measurements,
         "wall_s": result.wall_time_s,
-        "history": result.history,
-        "log": log,
+        "history": [list(r) for r in result.history],
+        "oracle": result.oracle_stats,
+        "records": records_path,
     }
     if out_path:
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -174,9 +153,12 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--budget", type=int, default=14)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--records", default=None,
+                    help="JSONL measurement records (persist + warm resume)")
     args = ap.parse_args()
-    s = search(args.arch, args.shape, args.budget, out_path=args.out)
-    print(json.dumps({k: v for k, v in s.items() if k != "log"}, indent=1))
+    s = search(args.arch, args.shape, args.budget, out_path=args.out,
+               records_path=args.records)
+    print(json.dumps(s, indent=1))
 
 
 if __name__ == "__main__":

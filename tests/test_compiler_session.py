@@ -1,0 +1,248 @@
+"""The unified tuning-session API: oracles, records, sessions, transfer."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.compiler.oracle import (AnalyticalOracle, SettingsOracle,
+                                   decode_config)
+from repro.compiler.records import RecordLog
+
+from repro.compiler.session import Session, SessionReport
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import DesignSpace, N_KNOBS
+from repro.core.shard_space import ShardSpace
+from repro.core.tuner import ArcoLoop, TunerConfig
+
+WL = dict(b=1, h=14, w=14, ci=64, co=64, kh=3, kw=3, stride=1, pad=1)
+FAST = TunerConfig.fast()
+
+
+@pytest.fixture(scope="module")
+def space():
+    return DesignSpace.for_conv2d(WL)
+
+
+def _tiny_cfg(**kw):
+    base = dict(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                mappo=mappo.MappoConfig(n_steps=16, n_envs=8), gbt_rounds=10)
+    base.update(kw)
+    return TunerConfig(**base)
+
+
+# ------------------------------------------------------------------ oracle
+
+def test_oracle_memoization_hit_miss(space):
+    oracle = AnalyticalOracle(space, task="memo")
+    cfgs = np.asarray(space.random_configs(jax.random.PRNGKey(0), 6))
+    cfgs = np.unique(cfgs, axis=0)
+    n = len(cfgs)
+    lat1, feats1 = oracle.measure(cfgs)
+    assert oracle.misses == n and oracle.hits == 0
+    assert feats1.shape == (n, 18)
+    lat2, feats2 = oracle.measure(cfgs)  # all cached
+    assert oracle.misses == n and oracle.hits == n
+    np.testing.assert_array_equal(lat1, lat2)
+    np.testing.assert_array_equal(feats1, feats2)
+    # half-overlapping batch: only the new half is measured
+    fresh = np.asarray(space.random_configs(jax.random.PRNGKey(1), 20))
+    fresh = np.asarray([c for c in np.unique(fresh, axis=0)
+                        if tuple(int(x) for x in c) not in oracle.seen])[:n]
+    mixed = np.concatenate([cfgs[: n // 2], fresh])
+    oracle.measure(mixed)
+    assert oracle.misses == n + len(fresh)
+    assert oracle.hits == n + n // 2
+    assert oracle.stats()["cached"] == n + len(fresh)
+
+
+def test_oracle_batch_duplicates_measured_once(space):
+    oracle = AnalyticalOracle(space, task="dup")
+    cfg = np.asarray(space.random_configs(jax.random.PRNGKey(2), 1))
+    batch = np.concatenate([cfg, cfg])
+    lat, _ = oracle.measure(batch)
+    assert oracle.misses == 1 and oracle.hits == 1
+    assert lat[0] == lat[1]
+
+
+def _flaky_cell(fail_when_sp):
+    def fn(settings):
+        if settings["sequence_parallel"] == fail_when_sp:
+            raise RuntimeError("compile blew up")
+        return 1.0 / settings["model_axis"]
+    return ShardSpace.for_cell("qwen2-1.5b", "train_4k", None,
+                               n_devices=256), fn
+
+
+def test_failed_measurement_penalty_recorded(tmp_path):
+    space, fn = _flaky_cell(fail_when_sp=True)
+    log = RecordLog(str(tmp_path / "rec.jsonl"))
+    oracle = SettingsOracle(space, fn, task="flaky", records=log)
+    # one config with SP on (fails), one with SP off (ok)
+    bad = np.zeros(N_KNOBS, np.int64)
+    bad[6] = 1   # tile_w slot -> sequence_parallel on
+    good = np.zeros(N_KNOBS, np.int64)
+    lat, _ = oracle.measure(np.stack([bad, good]))
+    assert lat[0] == oracle.penalty_latency
+    assert lat[1] == pytest.approx(1.0 / space.choices[0][0])
+    assert oracle.failures == 1
+    rows = log.load(task="flaky")
+    assert len(rows) == 2
+    errs = [r for r in rows if "error" in r]
+    assert len(errs) == 1 and "compile blew up" in errs[0]["error"]
+    assert errs[0]["latency"] == oracle.penalty_latency
+    assert errs[0]["settings"]["sequence_parallel"] is True
+
+
+def test_decode_config_both_space_kinds(space):
+    named = decode_config(space, np.zeros(N_KNOBS, np.int64))
+    assert set(named) == set(space.knob_names)
+    shard, _ = _flaky_cell(True)
+    s = decode_config(shard, np.zeros(N_KNOBS, np.int64))
+    assert s["model_axis"] == shard.choices[0][0]
+    assert s["sequence_parallel"] is False
+
+
+# ---------------------------------------------------------- seed budget fix
+
+def test_seed_batch_consumes_full_budget():
+    # tiny space (144 configs) -> 64 random draws certainly collide;
+    # np.unique dedup used to shrink iteration 0, leaking seed budget —
+    # the top-up must restore the full batch of *distinct* configs
+    space = DesignSpace.for_matmul(2, 2, 2)
+    assert space.size < 200
+    cfg = _tiny_cfg(b_measure=64)
+    loop = ArcoLoop(space, cfg, task="seed")
+    loop.seed(budget=64)
+    assert loop.track.count == 64
+    assert len(loop.track.seen) == 64
+
+
+# ------------------------------------------------------- records + resume
+
+def test_session_resume_from_records(tmp_path, space):
+    path = str(tmp_path / "session.jsonl")
+    task = TuningTask.from_space("conv64", space)
+    cfg = _tiny_cfg()
+
+    r1 = Session(task, tuner=cfg, budget=24, records=path).run().single
+    assert r1.oracle_stats["misses"] > 0
+
+    # same session again: replays warm from the records, same best config,
+    # zero new oracle measurements
+    r2 = Session(task, tuner=cfg, budget=24, records=path).run().single
+    assert r2.oracle_stats["misses"] == 0
+    assert r2.oracle_stats["hits"] == r2.n_measurements
+    assert r2.best_latency == r1.best_latency
+    assert r2.best_config == r1.best_config
+
+    # a larger budget continues the search instead of restarting it
+    r3 = Session(task, tuner=cfg, budget=40, records=path).run().single
+    assert r3.n_measurements == 40
+    assert r3.oracle_stats["misses"] <= 40 - 24 + cfg.b_measure
+    assert r3.best_latency <= r1.best_latency
+
+
+# ------------------------------------------------------------- session API
+
+def test_multi_task_session_shared_gbt(tmp_path):
+    tasks = [TuningTask.matmul(256, 512, 512), TuningTask.matmul(512, 512, 512)]
+    path = str(tmp_path / "cells.jsonl")
+    sr = Session(tasks, tuner=_tiny_cfg(), budget=24, records=path).run()
+    assert set(sr.reports) == {t.name for t in tasks}
+    for rep in sr:
+        assert rep.n_measurements == 24
+        assert np.isfinite(rep.best_latency)
+    rows = RecordLog(path).load()
+    assert {r["task"] for r in rows} == {t.name for t in tasks}
+    # every row carries the full GBT feature vector for warm refits
+    assert all(len(r["features"]) == 18 for r in rows)
+
+
+def test_session_report_json_roundtrip(space):
+    task = TuningTask.from_space("conv64", space)
+    sr = Session(task, tuner=_tiny_cfg(), budget=16).run()
+    d = json.loads(json.dumps(sr.to_dict()))
+    back = SessionReport.from_dict(d)
+    rep = back.single
+    assert rep.best_latency == sr.single.best_latency
+    assert rep.best_config == sr.single.best_config
+    assert rep.history == sr.single.history
+    assert rep.best_settings == sr.single.best_settings
+
+
+def test_report_best_settings_and_gflops(space):
+    rep = Session(TuningTask.from_space("conv64", space),
+                  tuner=_tiny_cfg(), budget=16).run().single
+    assert set(rep.best_settings) == set(space.knob_names)
+    assert rep.best_gflops(space) > 0
+
+
+def test_baseline_algos_through_session(space):
+    task = TuningTask.from_space("conv64", space)
+    for algo in ("random", "autotvm", "chameleon"):
+        rep = Session(task, tuner=_tiny_cfg(), algo=algo,
+                      budget=16).run().single
+        assert rep.n_measurements <= 16
+        assert np.isfinite(rep.best_latency)
+        assert rep.oracle_stats["misses"] == rep.n_measurements
+
+
+# --------------------------------------------------- cross-task transfer
+
+def _transfer_surfaces():
+    """Two toy (arch x shape)-style cells sharing one latency surface but
+    carrying different cell descriptors — the transfer-friendly regime."""
+    def make(arch):
+        space = ShardSpace.for_cell(arch, "train_4k", None, n_devices=256)
+
+        def fn(settings):
+            step = 1.0 + abs(np.log2(settings["model_axis"] / 16))
+            step *= 0.2 if settings["sequence_parallel"] else 1.0
+            step *= 0.8 if settings["remat"] else 1.0
+            step *= {1: 1.2, 2: 1.0, 4: 1.1, 8: 1.3}[settings["grad_accum"]]
+            return step
+
+        def factory(task, records):
+            return SettingsOracle(space, fn, task=task.name, records=records)
+
+        return TuningTask(name=arch, space=space, oracle_factory=factory)
+
+    return [make("qwen2-1.5b"), make("qwen1.5-4b")]
+
+
+def _mean_measured(sr):
+    """Search efficiency: mean latency over everything the run measured."""
+    return float(np.mean([l for rep in sr for _, l in rep.measurements]))
+
+
+def test_shared_gbt_beats_independent_arco():
+    tasks = _transfer_surfaces()
+    # distinct cell descriptors are what let one GBT serve both cells
+    assert not np.allclose(tasks[0].descriptor(), tasks[1].descriptor())
+    cfg = TunerConfig(iteration_opt=5, b_measure=8, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=10)
+    shared = Session(tasks, tuner=cfg, budget=40,
+                     share_cost_model=True).run()
+    indep = Session(tasks, tuner=cfg, budget=40,
+                    share_cost_model=False).run()
+    s_total = shared.total_best_latency()
+    i_total = indep.total_best_latency()
+    assert s_total < i_total, (s_total, i_total)
+    assert _mean_measured(shared) < _mean_measured(indep)
+
+
+def test_shared_gbt_beats_independent_autotvm():
+    """The surrogate-driven baseline benefits from transfer on every seed:
+    its SA proposals follow the GBT surface directly, so the cell-descriptor
+    features let cell B's search start from cell A's surface."""
+    tasks = _transfer_surfaces()
+    cfg = _tiny_cfg(b_measure=8)
+    shared = Session(tasks, tuner=cfg, algo="autotvm", budget=32,
+                     share_cost_model=True).run()
+    indep = Session(tasks, tuner=cfg, algo="autotvm", budget=32,
+                    share_cost_model=False).run()
+    assert shared.total_best_latency() <= indep.total_best_latency()
+    assert _mean_measured(shared) < _mean_measured(indep)

@@ -21,6 +21,21 @@ if SRC not in sys.path:
 # XLA_FLAGS at import time; keep it tiny for the import check.
 os.environ.setdefault("REPRO_DRYRUN_DEVICES", "2")
 
+# Modules that must exist (guards against packages being dropped or renamed
+# without this check noticing — the walk below only sees what's on disk).
+REQUIRED = (
+    "repro.compiler",
+    "repro.compiler.cli",
+    "repro.compiler.oracle",
+    "repro.compiler.records",
+    "repro.compiler.report",
+    "repro.compiler.session",
+    "repro.compiler.task",
+    "repro.core.tuner",
+    "repro.core.baselines",
+    "repro.launch.autotune",
+)
+
 
 def iter_modules():
     pkg_root = os.path.join(SRC, "repro")
@@ -38,6 +53,10 @@ def iter_modules():
 def main() -> int:
     failures = []
     modules = sorted(set(iter_modules()))
+    missing = [m for m in REQUIRED if m not in modules]
+    if missing:
+        print(f"MISSING required modules: {missing}", file=sys.stderr)
+        return 1
     for mod in modules:
         try:
             importlib.import_module(mod)
