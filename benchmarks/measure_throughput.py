@@ -1,0 +1,117 @@
+"""Measurement-throughput micro-bench for ``repro.compiler.executor``.
+
+Runs the same cold-cache measurement batch through a ``SettingsOracle``
+backed by the in-process ``SerialExecutor`` and by ``SubprocessExecutor``
+pools of 1/2/4 workers, against a deterministic stub oracle that sleeps
+``--delay`` seconds per measurement (modelling the tens-of-seconds SPMD
+compile at CI-friendly scale).  Reports measurements/sec per backend so
+the fan-out speedup is demonstrable without TPUs:
+
+    PYTHONPATH=src python benchmarks/measure_throughput.py
+    PYTHONPATH=src python benchmarks/measure_throughput.py \
+        --delay 0.5 --n 48 --workers 1,2,4,8 --json artifacts/throughput.json
+
+Worker pools are pre-spawned outside the timed region (a session reuses
+one pool across every Confidence-Sampling batch, so spawn cost amortizes
+away; the per-batch measurement rate is the number that gates
+optimization time).
+
+NOTE: all heavy imports live inside ``main`` on purpose.  Spawned workers
+re-import this script as ``__mp_main__``, and a module-level jax/numpy
+import would make every stub worker pay seconds of interpreter start-up —
+exactly the overhead the executor package's import-light rule exists to
+avoid.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def distinct_configs(space, n: int):
+    """First ``n`` configs in mixed-radix order — distinct, deterministic,
+    and identical for every backend."""
+    import numpy as np
+    radices = [len(c) for c in space.choices]
+    out = np.zeros((n, len(radices)), np.int64)
+    for i in range(n):
+        rem = i
+        for k, r in enumerate(radices):
+            out[i, k] = rem % r
+            rem //= r
+    return out
+
+
+def run_once(space, configs, executor, label: str) -> dict:
+    import numpy as np
+    from repro.compiler.oracle import SettingsOracle
+    oracle = SettingsOracle(space, fn=None, executor=executor,
+                            task=f"throughput/{label}", own_executor=True)
+    t0 = time.perf_counter()
+    lat, _ = oracle.measure(configs)
+    wall = time.perf_counter() - t0
+    oracle.close()
+    assert oracle.stats()["failures"] == 0, oracle.stats()
+    return {"backend": label, "wall_s": wall,
+            "meas_per_s": len(configs) / wall,
+            "mean_latency": float(np.mean(lat))}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--delay", type=float, default=0.2,
+                    help="stub oracle seconds per measurement")
+    ap.add_argument("--n", type=int, default=32,
+                    help="measurements per batch (cold cache)")
+    ap.add_argument("--workers", default="1,2,4",
+                    help="comma-separated subprocess pool sizes")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+
+    from repro.compiler.executor import (SerialExecutor, SubprocessExecutor,
+                                         WorkerSpec)
+    from repro.compiler.executor.stub import make_stub
+    from repro.core.shard_space import ShardSpace
+
+    space = ShardSpace.for_cell("qwen2-1.5b", "train_4k", None, n_devices=256)
+    configs = distinct_configs(space, args.n)
+    spec = WorkerSpec(factory="repro.compiler.executor.stub:make_stub",
+                      kwargs={"delay_s": args.delay})
+
+    rows = [run_once(space, configs,
+                     SerialExecutor(fn=make_stub(delay_s=args.delay)),
+                     "serial")]
+    for w in (int(x) for x in args.workers.split(",")):
+        pool = SubprocessExecutor(spec, workers=w)
+        pool.start()  # spawn outside the timed region (pool is reused)
+        rows.append(run_once(space, configs, pool, f"subprocess[{w}]"))
+
+    base = rows[0]["meas_per_s"]
+    print(f"\n{args.n} measurements/batch, {args.delay:.2f}s stub oracle")
+    print(f"{'backend':16s} {'wall_s':>8s} {'meas/s':>8s} {'speedup':>8s}")
+    for r in rows:
+        r["speedup_vs_serial"] = r["meas_per_s"] / base
+        print(f"{r['backend']:16s} {r['wall_s']:8.2f} "
+              f"{r['meas_per_s']:8.2f} {r['speedup_vs_serial']:7.2f}x")
+
+    # parity: every backend must agree on the (deterministic) stub values
+    assert len({round(r["mean_latency"], 12) for r in rows}) == 1, rows
+
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"delay_s": args.delay, "n": args.n, "runs": rows},
+                      f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,9 +9,10 @@ trend at ~6x less wall time.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.compiler import Session, TuningTask
 from repro.core import mappo
@@ -52,15 +53,18 @@ def unique_tasks() -> Dict[str, Task]:
     return seen
 
 
-def _tune(framework: str, space, cfg: TunerConfig):
+def _tune(framework: str, space, cfg: TunerConfig, workers: int = 0,
+          timeout_s: Optional[float] = None):
     """One framework on one task via the session API; the typed report is
     JSON-serializable end-to-end (no hand re-packing)."""
     task = TuningTask.from_space("bench", space)
-    report = Session(task, tuner=cfg, algo=framework).run().single
+    report = Session(task, tuner=cfg, algo=framework, workers=workers,
+                     timeout_s=timeout_s).run().single
     return report.to_dict()
 
 
-def run_sweep(force: bool = False) -> Dict:
+def run_sweep(force: bool = False, workers: int = 0,
+              timeout_s: Optional[float] = None) -> Dict:
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, f"sweep_{'paper' if PAPER else 'default'}.json")
     if os.path.exists(path) and not force:
@@ -78,7 +82,8 @@ def run_sweep(force: bool = False) -> Dict:
         wl = task.space.workload
         entry = {"workload": wl}
         for fw in FRAMEWORKS:
-            entry[fw] = _tune(fw, task.space, cfg)
+            entry[fw] = _tune(fw, task.space, cfg, workers=workers,
+                              timeout_s=timeout_s)
         out["tasks"][key] = entry
         print(f"[{i + 1}/{len(tasks)}] {wl['h']}x{wl['w']}x{wl['ci']}->"
               f"{wl['co']} k{wl['kh']}s{wl['stride']}: " +
@@ -114,4 +119,13 @@ def network_results(sweep: Dict) -> Dict[str, Dict[str, float]]:
 
 
 if __name__ == "__main__":
-    run_sweep(force=os.environ.get("REPRO_FORCE", "0") == "1")
+    from repro.compiler.executor import add_worker_args, validate_worker_args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune even if a cached sweep exists "
+                         "(REPRO_FORCE=1 also works)")
+    add_worker_args(ap)
+    args = ap.parse_args()
+    validate_worker_args(ap, args)
+    run_sweep(force=args.force or os.environ.get("REPRO_FORCE", "0") == "1",
+              workers=args.workers, timeout_s=args.timeout_s)

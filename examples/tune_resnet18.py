@@ -20,7 +20,10 @@ def main():
     ap.add_argument("--records", default=None,
                     help="JSONL records prefix; one file per framework so "
                          "no framework warm-starts from another's cache")
+    from repro.compiler.executor import add_worker_args, validate_worker_args
+    add_worker_args(ap)
     args = ap.parse_args()
+    validate_worker_args(ap, args)
 
     n_iter = max(args.budget // 32, 2)
     cfg = TunerConfig(iteration_opt=n_iter, b_measure=32,
@@ -37,7 +40,8 @@ def main():
     for fw in ("arco", "autotvm", "chameleon"):
         records = args.records and f"{args.records}.{fw}.jsonl"
         sr = Session(tasks, tuner=cfg, algo=fw, budget=args.budget,
-                     records=records).run()
+                     records=records, workers=args.workers,
+                     timeout_s=args.timeout_s).run()
         totals[fw] = sr.total_best_latency(mult)
         walls[fw] = sr.wall_time_s
         print(f"{fw:10s} network conv latency "

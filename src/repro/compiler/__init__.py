@@ -19,6 +19,11 @@ _EXPORTS = {
     "SettingsOracle": "repro.compiler.oracle",
     "CompileOracle": "repro.compiler.oracle",
     "decode_config": "repro.compiler.oracle",
+    "Executor": "repro.compiler.executor",
+    "SerialExecutor": "repro.compiler.executor",
+    "SubprocessExecutor": "repro.compiler.executor",
+    "WorkerSpec": "repro.compiler.executor",
+    "MeasureResult": "repro.compiler.executor",
     "RecordLog": "repro.compiler.records",
     "TuneReport": "repro.compiler.report",
     "Tracker": "repro.compiler.report",

@@ -12,6 +12,13 @@
     # pod-level compile oracle (expensive: one SPMD compile per measurement)
     PYTHONPATH=src python -m repro.compiler.cli \
         --arch qwen2-1.5b --shape train_4k --oracle compile --budget 8
+
+    # same, fanned across 4 crash-isolated measurement workers with a
+    # 300s per-compile timeout (timed-out/crashed measurements record the
+    # failure-penalty row; the pool respawns and the session keeps going)
+    PYTHONPATH=src python -m repro.compiler.cli \
+        --arch qwen2-1.5b --shape train_4k --oracle compile --budget 8 \
+        --workers 4 --timeout-s 300
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import json
 import sys
 from typing import List
 
+from repro.compiler.executor import add_worker_args, validate_worker_args
 from repro.compiler.session import ALGOS, Session
 from repro.compiler.task import TuningTask
 from repro.core.tuner import TunerConfig
@@ -72,8 +80,10 @@ def main(argv=None) -> int:
                     help="per-task GBT instead of the shared cost model")
     ap.add_argument("--records", default=None,
                     help="JSONL measurement records (persist + warm resume)")
+    add_worker_args(ap)
     ap.add_argument("--out", default=None, help="write session JSON here")
     args = ap.parse_args(argv)
+    validate_worker_args(ap, args)
     if args.arch and not args.shape:
         args.shape = ["train_4k"]
 
@@ -81,7 +91,8 @@ def main(argv=None) -> int:
     session = Session(tasks, tuner=TunerConfig.fast(), algo=args.algo,
                       budget=args.budget, use_cs=not args.no_cs,
                       share_cost_model=not args.independent,
-                      records=args.records, seed=args.seed)
+                      records=args.records, seed=args.seed,
+                      workers=args.workers, timeout_s=args.timeout_s)
     result = session.run()
 
     summary = result.to_dict()

@@ -1,0 +1,45 @@
+"""``repro.compiler.executor`` — parallel, crash-isolated measurement
+execution for the compile oracle.
+
+The oracle's expensive regime (one SPMD lower+compile per measurement,
+tens of seconds each) used to serialize an entire Confidence-Sampling
+batch.  This package turns measurement into a submit/drain pipeline:
+
+* :class:`Executor` — the protocol: ``submit(task, settings) -> handle``
+  plus ``poll``/``drain``/``close``.
+* :class:`SerialExecutor` — in-process execution, preserving the exact
+  pre-executor behavior (and the determinism reference for tests).
+* :class:`SubprocessExecutor` — a pool of spawned worker processes, each
+  doing its own jax init with a pinned
+  ``--xla_force_host_platform_device_count``; per-measurement timeouts,
+  worker-crash isolation (a dead or hung worker yields a failure result
+  and the pool respawns), and bounded in-flight depth.
+
+Results always flow back through the one memoizing, JSONL-persisting
+``Oracle`` in the parent process, so memo/records/resume semantics are
+unchanged no matter which executor ran the measurement.
+
+This package must stay importable without jax: workers that measure cheap
+stub oracles (tests, the throughput micro-bench) should not pay a jax
+import at spawn time.  Anything jax-flavored belongs in the worker
+*factory* the :class:`WorkerSpec` names, which is resolved lazily inside
+the worker process.
+"""
+from repro.compiler.executor.base import (Executor, MeasureHandle,
+                                          MeasureResult, SerialExecutor,
+                                          WorkerSpec, add_worker_args,
+                                          resolve_factory,
+                                          validate_worker_args)
+from repro.compiler.executor.pool import SubprocessExecutor
+
+__all__ = [
+    "Executor",
+    "MeasureHandle",
+    "MeasureResult",
+    "SerialExecutor",
+    "SubprocessExecutor",
+    "WorkerSpec",
+    "add_worker_args",
+    "resolve_factory",
+    "validate_worker_args",
+]

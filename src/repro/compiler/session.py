@@ -11,6 +11,12 @@ A :class:`Session` runs ARCO or any baseline over *one or many*
 * ``records=<path.jsonl>`` persists every measurement and resumes warm:
   re-running the same session replays from cache, a larger budget
   continues the search without re-paying oracle cost;
+* ``workers=N`` fans expensive per-settings measurements (the compile
+  oracle) across a crash-isolated subprocess pool with ``timeout_s``
+  per-measurement timeouts; the interleaved ARCO scheduler then overlaps
+  one task's GBT refits and MAPPO updates with another's in-flight
+  compiles so all workers stay busy across tasks (analytical tasks are
+  batched and cheap — they ignore ``workers``);
 * the result is a typed :class:`SessionReport` of per-task
   :class:`~repro.compiler.report.TuneReport`\\ s.
 
@@ -92,7 +98,8 @@ class Session:
                  budget: Optional[int] = None, use_cs: bool = True,
                  share_cost_model: bool = True,
                  records: Union[None, str, RecordLog] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 workers: int = 0, timeout_s: Optional[float] = None):
         if isinstance(tasks, TuningTask):
             tasks = [tasks]
         self.tasks = list(tasks)
@@ -113,6 +120,20 @@ class Session:
         self.share_cost_model = share_cost_model
         self.records = (RecordLog(records) if isinstance(records, str)
                         else records)
+        if timeout_s is not None and not workers:
+            raise ValueError("timeout_s needs workers >= 1: in-process "
+                             "measurements cannot be preempted")
+        self.workers = workers
+        self.timeout_s = timeout_s
+        self._oracles = []  # created by run(), closed in its finally
+        self._executor = None  # ONE worker pool shared by all tasks
+
+    def _make_oracle(self, task: TuningTask):
+        oracle = task.make_oracle(self.records, workers=self.workers,
+                                  timeout_s=self.timeout_s,
+                                  executor=self._executor)
+        self._oracles.append(oracle)
+        return oracle
 
     # ----------------------------------------------------------------- run
     def run(self) -> SessionReport:
@@ -120,10 +141,26 @@ class Session:
         shared_gbt = (GBTModel(n_rounds=self.cfg.gbt_rounds,
                                seed=self.cfg.seed)
                       if self.share_cost_model else None)
-        if self.algo == "arco":
-            reports = self._run_arco(shared_gbt)
-        else:
-            reports = self._run_baseline(shared_gbt)
+        if self.workers > 0:
+            # one pool for the whole session — N workers total, not
+            # N per task; jobs carry each oracle's own WorkerSpec.
+            # Workers spawn lazily, so this is free for tasks that never
+            # submit (e.g. analytical oracles, fully-warm resumes).
+            from repro.compiler.executor import SubprocessExecutor
+            self._executor = SubprocessExecutor(workers=self.workers,
+                                                timeout_s=self.timeout_s)
+        try:
+            if self.algo == "arco":
+                reports = self._run_arco(shared_gbt)
+            else:
+                reports = self._run_baseline(shared_gbt)
+        finally:
+            for oracle in self._oracles:  # tear down any worker pools
+                oracle.close()
+            self._oracles = []
+            if self._executor is not None:
+                self._executor.close()
+                self._executor = None
         return SessionReport(reports=reports,
                              wall_time_s=time.perf_counter() - t0,
                              algo=self.algo,
@@ -133,35 +170,68 @@ class Session:
     def _run_arco(self, shared_gbt: Optional[GBTModel]
                   ) -> Dict[str, TuneReport]:
         """Interleaved ARCO: one iteration per task per round, every task
-        refitting the same surrogate when the cost model is shared."""
+        refitting the same surrogate when the cost model is shared.
+
+        The loop drives each task through ``step_submit``/``collect``
+        halves: with in-process oracles a batch resolves at submit time and
+        the schedule reduces to the classic one-iteration-per-task round
+        robin, while executor-backed oracles leave batches in flight — the
+        scheduler then runs other tasks' MAPPO/GBT work (keeping every
+        worker busy across tasks) and only blocks when *all* remaining
+        tasks are waiting on measurements.
+        """
         loops = [
             ArcoLoop(t.space, self.cfg,
-                     oracle=t.make_oracle(self.records),
+                     oracle=self._make_oracle(t),
                      gbt=shared_gbt if shared_gbt is not None else GBTModel(
                          n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed),
                      use_cs=self.use_cs, task=t.name)
             for t in self.tasks]
+        # Seed all tasks first, collecting (and refitting) in task order —
+        # identical refit order to the sequential path, but the seed
+        # batches of all tasks share the worker pool.
         for loop in loops:
-            loop.seed(self.budget)
-        progressed = True
-        while progressed:
+            loop.seed_submit(self.budget)
+        for loop in loops:
+            loop.collect(block=True)
+        active = list(loops)
+        while active:
             progressed = False
-            for loop in loops:
-                if loop.exhausted or loop.track.count >= self.budget:
-                    continue
-                if loop.step(self.budget):
+            for loop in list(active):
+                if loop.has_pending:
+                    if not loop.collect(block=False):
+                        continue  # still compiling; run the other tasks
                     progressed = True
+                if loop.exhausted or loop.track.count >= self.budget:
+                    active.remove(loop)
+                    progressed = True
+                    continue
+                if loop.step_submit(self.budget):
+                    progressed = True
+                    if loop.pending_ready():
+                        # in-process oracle: finish the iteration now, so
+                        # the schedule matches the synchronous loop exactly
+                        loop.collect(block=True)
+                else:
+                    active.remove(loop)
+                    progressed = True
+            if not progressed and active:
+                # every remaining task is waiting on the oracle — block on
+                # the first one instead of spinning
+                next(l for l in active if l.has_pending).collect(block=True)
         return {t.name: loop.report()
                 for t, loop in zip(self.tasks, loops)}
 
     def _run_baseline(self, shared_gbt: Optional[GBTModel]
                       ) -> Dict[str, TuneReport]:
         """Baselines run sequentially per task; GBT-based ones still share
-        the surrogate across tasks when the cost model is shared."""
+        the surrogate across tasks when the cost model is shared.  (Their
+        ``oracle.measure`` calls still fan each *batch* across the worker
+        pool when the oracle is executor-backed.)"""
         from repro.core import baselines as B
         reports: Dict[str, TuneReport] = {}
         for t in self.tasks:
-            oracle = t.make_oracle(self.records)
+            oracle = self._make_oracle(t)
             kw = dict(cfg=self.cfg, budget=self.budget, oracle=oracle,
                       task=t.name)
             if self.algo == "random":

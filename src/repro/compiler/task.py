@@ -10,6 +10,7 @@ makes cross-task cost-model transfer work: a shared surrogate sees
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -30,9 +31,26 @@ class TuningTask:
     oracle_factory: Optional[Callable[["TuningTask", Optional[RecordLog]],
                                       Oracle]] = None
 
-    def make_oracle(self, records: Optional[RecordLog] = None) -> Oracle:
+    def make_oracle(self, records: Optional[RecordLog] = None,
+                    workers: int = 0,
+                    timeout_s: Optional[float] = None,
+                    executor=None) -> Oracle:
+        """Build this task's oracle.  ``workers``/``timeout_s`` configure
+        subprocess fan-out for expensive per-settings oracles, and
+        ``executor`` is a session-shared worker pool (one pool serving
+        every task, jobs carrying per-task specs); factories that don't
+        take them (and the batched analytical oracle, which is cheap and
+        vectorized) simply ignore them."""
         if self.oracle_factory is not None:
-            return self.oracle_factory(self, records)
+            params = inspect.signature(self.oracle_factory).parameters
+            kw = {}
+            var_kw = any(p.kind == inspect.Parameter.VAR_KEYWORD
+                         for p in params.values())
+            if var_kw or "workers" in params:
+                kw.update(workers=workers, timeout_s=timeout_s)
+            if var_kw or "executor" in params:
+                kw["executor"] = executor
+            return self.oracle_factory(self, records, **kw)
         return AnalyticalOracle(self.space, task=self.name, records=records)
 
     def descriptor(self) -> np.ndarray:
@@ -91,12 +109,15 @@ class TuningTask:
                 "REPRO_DRYRUN_DEVICES) before first jax use, or pass "
                 "n_devices explicitly")
 
-        def factory(task: "TuningTask",
-                    records: Optional[RecordLog]) -> Oracle:
+        def factory(task: "TuningTask", records: Optional[RecordLog],
+                    workers: int = 0, timeout_s: Optional[float] = None,
+                    executor=None) -> Oracle:
             # the session loop and the oracle share one space object
-            return CompileOracle(arch, shape, task=task.name,
-                                 records=records, verbose=verbose,
-                                 space=task.space)
+            return CompileOracle(arch, shape, n_devices=n_devices,
+                                 task=task.name, records=records,
+                                 verbose=verbose, space=task.space,
+                                 workers=workers, timeout_s=timeout_s,
+                                 executor=executor)
 
         return TuningTask(name=f"{arch}/{shape}", space=space,
                           oracle_factory=factory)

@@ -16,6 +16,15 @@ The loop is exposed in stepwise form (:class:`ArcoLoop`: ``seed()`` +
 ``step()``) so ``repro.compiler.Session`` can interleave several tasks over
 one *shared* GBT cost model (cross-task transfer via the cell-descriptor
 half of the feature vector); ``arco_tune`` is the single-task adapter.
+
+Each step is further split into ``step_submit()`` (MARL explore + CS
+select + hand the batch to the oracle, possibly asynchronously) and
+``collect()`` (wait for the batch, record it, refit the GBT), so a session
+whose oracle measures on a worker pool can run other tasks' MAPPO updates
+and GBT refits while this task's compiles are in flight.  With the default
+in-process oracle the batch resolves during ``step_submit`` and
+``step() == step_submit() + collect()`` reproduces the synchronous loop
+exactly.
 """
 from __future__ import annotations
 
@@ -96,11 +105,49 @@ class ArcoLoop:
         self.params, self.opt_state = mappo.init_state(self.rng, cfg.mappo)
         self.it = 0
         self.exhausted = False
+        # (configs, PendingBatch) submitted but not yet collected/refit
+        self._pending = None
+
+    # ----------------------------------------------------------- async seam
+    @property
+    def has_pending(self) -> bool:
+        return self._pending is not None
+
+    def pending_ready(self) -> bool:
+        """True when the in-flight batch (if any) can be collected without
+        blocking."""
+        return self._pending is None or self._pending[1].ready()
+
+    def collect(self, block: bool = False) -> bool:
+        """Finalize the in-flight measurement batch: wait for the oracle,
+        record the results, refit the GBT.  Returns False when a batch is
+        still in flight and ``block`` is False; True otherwise."""
+        if self._pending is None:
+            return True
+        cfgs, batch = self._pending
+        if not block and not batch.ready():
+            return False
+        t0 = time.perf_counter()
+        lat, feats = batch.get()
+        self._pending = None
+        self.track.add_active(time.perf_counter() - t0)
+        self.track.record(cfgs, lat)
+        t_fit = time.perf_counter()
+        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+        self.track.add_active(time.perf_counter() - t_fit)
+        return True
 
     # ------------------------------------------------------------ iteration 0
     def seed(self, budget: Optional[int] = None) -> None:
         """Seed the cost model with random measurements (all methods do this
         — an untrained surrogate carries no signal)."""
+        self.seed_submit(budget)
+        self.collect(block=True)
+
+    def seed_submit(self, budget: Optional[int] = None) -> None:
+        """Draw and submit the seed batch; ``collect()`` finalizes it."""
+        if self._pending is not None:
+            raise RuntimeError("seed_submit with a batch still in flight")
         t_start = time.perf_counter()
         n = self.cfg.b_measure if budget is None else min(
             self.cfg.b_measure, budget)
@@ -114,17 +161,24 @@ class ArcoLoop:
             return self.space.random_configs(r, m)
 
         cfgs = unique_seed_batch(draw, n, self.space.size)
-        lat, feats = self.oracle.measure(cfgs)
+        batch = self.oracle.measure_async(cfgs)
         self.track.add_active(time.perf_counter() - t_start)
-        self.track.record(cfgs, lat)
-        t_fit = time.perf_counter()
-        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-        self.track.add_active(time.perf_counter() - t_fit)
+        self._pending = (cfgs, batch)
 
     # -------------------------------------------------------- one iteration
     def step(self, budget: int) -> bool:
-        """One optimization iteration; returns False once the search space
-        is exhausted (nothing new to measure)."""
+        """One synchronous optimization iteration; returns False once the
+        search space is exhausted (nothing new to measure)."""
+        out = self.step_submit(budget)
+        self.collect(block=True)
+        return out
+
+    def step_submit(self, budget: int) -> bool:
+        """The explore/select half of one iteration: MAPPO episodes, CS
+        candidate selection, submit the batch to the oracle.  Returns False
+        once the search space is exhausted."""
+        if self._pending is not None:
+            raise RuntimeError("step_submit with a batch still in flight")
         if self.exhausted or self.track.count >= budget:
             return not self.exhausted
         t_start = time.perf_counter()
@@ -169,16 +223,14 @@ class ArcoLoop:
             return False
         cand = np.asarray(cand_list[:n_meas], np.int64).reshape(-1, N_KNOBS)
 
-        lat, feats = self.oracle.measure(cand)
+        batch = self.oracle.measure_async(cand)
         self.track.add_active(time.perf_counter() - t_start)
-        self.track.record(cand, lat)
-        t_fit = time.perf_counter()
-        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
-        self.track.add_active(time.perf_counter() - t_fit)
+        self._pending = (cand, batch)
         return True
 
     # -------------------------------------------------------------- result
     def report(self) -> TuneReport:
+        self.collect(block=True)  # never report around an in-flight batch
         settings = (decode_config(self.space, self.track.best_cfg)
                     if self.track.best_cfg is not None else None)
         return self.track.report(oracle=self.oracle, best_settings=settings)

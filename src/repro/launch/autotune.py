@@ -115,12 +115,19 @@ def compile_and_analyze(arch: str, shape_name: str,
 
 def search(arch: str, shape_name: str, budget: int = 14,
            seed: int = 0, out_path: str = None,
-           records_path: str = None):
+           records_path: str = None,
+           workers: int = 0, timeout_s: float = None):
     """Thin adapter over the session API: one compile-oracle cell, measured
     through ``CompileOracle``.  Re-measures from scratch unless the caller
     opts into persistence with ``records_path`` (JSONL), from which a re-run
     resumes warm — never derived implicitly, so a plain re-run after a code
-    or toolchain change always reflects fresh measurements."""
+    or toolchain change always reflects fresh measurements.
+
+    ``workers=N`` fans the tens-of-seconds compiles across N spawned
+    measurement workers (each with its own jax init against the same
+    pinned device count); ``timeout_s`` bounds each compile — a hung or
+    crashed worker records the failure-penalty row and the pool respawns,
+    so the search never wedges on one bad configuration."""
     from repro.compiler import Session, TuningTask
     cfg = TunerConfig(
         iteration_opt=max(budget // 4, 2), b_measure=4,
@@ -128,8 +135,8 @@ def search(arch: str, shape_name: str, budget: int = 14,
         mappo=mappo.MappoConfig(n_steps=32, n_envs=8), gbt_rounds=12,
         seed=seed)
     task = TuningTask.cell(arch, shape_name, n_devices=len(jax.devices()))
-    result = Session(task, tuner=cfg, budget=budget,
-                     records=records_path).run().single
+    result = Session(task, tuner=cfg, budget=budget, records=records_path,
+                     workers=workers, timeout_s=timeout_s).run().single
     summary = {
         "arch": arch, "shape": shape_name,
         "best_settings": result.best_settings,
@@ -139,6 +146,7 @@ def search(arch: str, shape_name: str, budget: int = 14,
         "history": [list(r) for r in result.history],
         "oracle": result.oracle_stats,
         "records": records_path,
+        "workers": workers,
     }
     if out_path:
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -155,9 +163,13 @@ def main():
     ap.add_argument("--out", default=None)
     ap.add_argument("--records", default=None,
                     help="JSONL measurement records (persist + warm resume)")
+    from repro.compiler.executor import add_worker_args, validate_worker_args
+    add_worker_args(ap)
     args = ap.parse_args()
+    validate_worker_args(ap, args)
     s = search(args.arch, args.shape, args.budget, out_path=args.out,
-               records_path=args.records)
+               records_path=args.records, workers=args.workers,
+               timeout_s=args.timeout_s)
     print(json.dumps(s, indent=1))
 
 

@@ -58,12 +58,18 @@ def test_oracle_memoization_hit_miss(space):
 
 
 def test_oracle_batch_duplicates_measured_once(space):
+    # an in-batch duplicate on a cold cache is a *dedup*, not a cache hit
     oracle = AnalyticalOracle(space, task="dup")
     cfg = np.asarray(space.random_configs(jax.random.PRNGKey(2), 1))
     batch = np.concatenate([cfg, cfg])
     lat, _ = oracle.measure(batch)
-    assert oracle.misses == 1 and oracle.hits == 1
+    assert oracle.misses == 1 and oracle.hits == 0
+    assert oracle.stats()["dedup"] == 1
     assert lat[0] == lat[1]
+    # re-measuring the same batch: one real hit, the duplicate still dedups
+    oracle.measure(batch)
+    assert oracle.misses == 1 and oracle.hits == 2
+    assert oracle.stats()["dedup"] == 1
 
 
 def _flaky_cell(fail_when_sp):

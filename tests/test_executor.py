@@ -1,0 +1,322 @@
+"""``repro.compiler.executor`` — parallel, crash-isolated measurement.
+
+Covers the executor protocol itself (serial + subprocess pools), every
+failure path the issue names (worker raise, worker crash, per-measurement
+timeout — each must record the failure-penalty row, keep the session
+running, and leave ``stats()['failures']`` correct), records durability
+under kills, and serial-vs-subprocess determinism at a fixed seed.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.compiler.executor import (MeasureResult, SerialExecutor,
+                                     SubprocessExecutor, WorkerSpec)
+from repro.compiler.executor.stub import make_stub, stub_latency
+from repro.compiler.oracle import SettingsOracle, decode_config
+from repro.compiler.records import RecordLog
+from repro.compiler.session import Session
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import N_KNOBS
+from repro.core.shard_space import ShardSpace
+from repro.core.tuner import TunerConfig
+
+STUB = "repro.compiler.executor.stub:make_stub"
+
+
+@pytest.fixture(scope="module")
+def space():
+    return ShardSpace.for_cell("qwen2-1.5b", "train_4k", None, n_devices=256)
+
+
+def _cfg(knob: int = -1, idx: int = 1) -> np.ndarray:
+    """All-defaults config, optionally with one knob bumped to ``idx``."""
+    c = np.zeros(N_KNOBS, np.int64)
+    if knob >= 0:
+        c[knob] = idx
+    return c
+
+
+# Settings triggered by single knob bumps (see shard_space knob order):
+FAIL_COND = {"fsdp": True}               # knob 2 -> fsdp on
+HANG_COND = {"sequence_parallel": True}  # knob 6 -> SP on
+EXIT_COND = {"remat": True}              # knob 4 -> remat on
+FAIL_CFG, HANG_CFG, EXIT_CFG = _cfg(2), _cfg(6), _cfg(4)
+
+
+# ----------------------------------------------------------------- executors
+
+def test_serial_executor_runs_and_reports_errors():
+    ex = SerialExecutor(fn=make_stub(fail_when=FAIL_COND))
+    ok = ex.submit("t", {"model_axis": 4})
+    assert ok.done() and ok.result().ok
+    assert ok.result().value == stub_latency({"model_axis": 4})
+    bad = ex.submit("t", {"model_axis": 4, "fsdp": True})
+    res = bad.result()
+    assert not res.ok and "RuntimeError: stub measurement failed" in res.error
+
+
+def test_subprocess_pool_matches_serial_values(space):
+    spec = WorkerSpec(factory=STUB, kwargs={"delay_s": 0.05})
+    settings = [decode_config(space, _cfg(0, i)) for i in range(4)]
+    with SubprocessExecutor(spec, workers=2) as pool:
+        handles = [pool.submit("t", s) for s in settings]
+        pool.drain(handles)
+        for s, h in zip(settings, handles):
+            assert h.result().ok
+            assert h.result().value == stub_latency(s)
+    assert pool.stats()["workers_alive"] == 0  # context exit tore it down
+
+
+def test_subprocess_bad_factory_fails_jobs_not_pool():
+    spec = WorkerSpec(factory="repro.compiler.executor.stub:nope")
+    with SubprocessExecutor(spec, workers=1) as pool:
+        h = pool.submit("t", {"x": 1})
+        res = h.result()
+        assert not res.ok and "WorkerInitError" in res.error
+        # the worker survives a bad factory (no respawn churn)
+        assert pool.stats()["respawns"] == 0
+
+
+# -------------------------------------------------- oracle failure paths
+
+def _oracle(space, pool, records=None, **kw):
+    return SettingsOracle(space, fn=None, executor=pool, own_executor=True,
+                          task="exec", records=records, **kw)
+
+
+def test_worker_raise_records_penalty_row(space, tmp_path):
+    log = RecordLog(str(tmp_path / "raise.jsonl"))
+    spec = WorkerSpec(factory=STUB, kwargs={"fail_when": FAIL_COND})
+    oracle = _oracle(space, SubprocessExecutor(spec, workers=2), records=log)
+    batch = np.stack([FAIL_CFG, _cfg(), _cfg(0, 1)])
+    lat, feats = oracle.measure(batch)
+    oracle.close()
+    assert lat[0] == oracle.penalty_latency
+    assert lat[1] == stub_latency(decode_config(space, _cfg()))
+    assert oracle.stats()["failures"] == 1
+    assert feats.shape[0] == 3
+    rows = log.load(task="exec")
+    errs = [r for r in rows if "error" in r]
+    assert len(rows) == 3 and len(errs) == 1
+    assert "stub measurement failed" in errs[0]["error"]
+    assert errs[0]["latency"] == oracle.penalty_latency
+    assert errs[0]["settings"]["fsdp"] is True
+
+
+def test_worker_timeout_kills_respawns_and_continues(space, tmp_path):
+    log = RecordLog(str(tmp_path / "hang.jsonl"))
+    spec = WorkerSpec(factory=STUB, kwargs={"hang_when": HANG_COND})
+    # worker start-up (spawn + import) is not billed to the measurement:
+    # the deadline restarts when the worker acks that the measure fn is
+    # running, so a short timeout is safe even on a loaded CI box
+    pool = SubprocessExecutor(spec, workers=2, timeout_s=1.0)
+    oracle = _oracle(space, pool, records=log)
+    batch = np.stack([HANG_CFG, _cfg(), _cfg(0, 2)])
+    lat, _ = oracle.measure(batch)
+    assert lat[0] == oracle.penalty_latency
+    assert oracle.stats()["failures"] == 1
+    assert pool.respawns == 1  # the hung worker was killed
+    rows = log.load(task="exec")
+    assert any("TimeoutError" in r.get("error", "") for r in rows)
+    # the pool keeps serving measurements after the kill
+    lat2, _ = oracle.measure(np.stack([_cfg(0, 3), _cfg(0, 4)]))
+    assert oracle.stats()["failures"] == 1  # no new failures
+    assert np.all(lat2 < 1.0)
+    oracle.close()
+
+
+def test_worker_crash_is_isolated(space, tmp_path):
+    log = RecordLog(str(tmp_path / "crash.jsonl"))
+    spec = WorkerSpec(factory=STUB, kwargs={"exit_when": EXIT_COND})
+    pool = SubprocessExecutor(spec, workers=2)
+    oracle = _oracle(space, pool, records=log)
+    lat, _ = oracle.measure(np.stack([EXIT_CFG, _cfg(), _cfg(0, 1)]))
+    assert lat[0] == oracle.penalty_latency
+    assert lat[1] < 1.0 and lat[2] < 1.0
+    assert oracle.stats()["failures"] == 1
+    assert pool.respawns == 1
+    assert any("WorkerCrash" in r.get("error", "")
+               for r in log.load(task="exec"))
+    # warm resume across the failure: a fresh oracle replays from records
+    resumed = SettingsOracle(space, fn=make_stub(), task="exec", records=log)
+    lat3, _ = resumed.measure(np.stack([EXIT_CFG, _cfg()]))
+    assert resumed.stats()["misses"] == 0
+    assert lat3[0] == oracle.penalty_latency
+    oracle.close()
+
+
+def test_measure_async_overlaps_with_parent_work(space):
+    spec = WorkerSpec(factory=STUB, kwargs={"delay_s": 0.2})
+    oracle = _oracle(space, SubprocessExecutor(spec, workers=2))
+    batch = oracle.measure_async(np.stack([_cfg(), _cfg(0, 1)]))
+    overlapped = 0
+    while not batch.ready():  # parent stays free while workers measure
+        overlapped += 1
+    lat, _ = batch.get()
+    assert overlapped > 0
+    assert list(lat) == [stub_latency(decode_config(space, _cfg())),
+                         stub_latency(decode_config(space, _cfg(0, 1)))]
+    assert oracle.stats() == {"hits": 0, "misses": 2, "dedup": 0,
+                              "failures": 0, "cached": 2}
+    oracle.close()
+
+
+# ----------------------------------------------------------- determinism
+
+def _stub_task(space, name, subprocess_workers=0):
+    def factory(task, records, workers=0, timeout_s=None):
+        if subprocess_workers:
+            pool = SubprocessExecutor(
+                WorkerSpec(factory=STUB), workers=subprocess_workers,
+                timeout_s=timeout_s)
+            return SettingsOracle(space, fn=None, executor=pool,
+                                  own_executor=True, task=task.name,
+                                  records=records)
+        return SettingsOracle(space, fn=make_stub(), task=task.name,
+                              records=records)
+    return TuningTask(name=name, space=space, oracle_factory=factory)
+
+
+def test_serial_and_subprocess_reports_identical(space):
+    cfg = TunerConfig(iteration_opt=2, b_measure=6, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=8, seed=3)
+    runs = {}
+    for label, w in (("serial", 0), ("subprocess", 1)):
+        rep = Session(_stub_task(space, "det", subprocess_workers=w),
+                      tuner=cfg, budget=12).run().single
+        runs[label] = rep
+    a, b = runs["serial"], runs["subprocess"]
+    assert a.best_config == b.best_config
+    assert a.best_latency == b.best_latency
+    assert a.measurements == b.measurements
+    assert [(n, lat) for n, lat, _ in a.history] == \
+           [(n, lat) for n, lat, _ in b.history]
+    assert a.oracle_stats["failures"] == b.oracle_stats["failures"] == 0
+
+
+def test_session_survives_failures_and_resumes(space, tmp_path):
+    """A session whose oracle raises on part of the space keeps running,
+    records penalty rows, and warm-resumes from the same records file."""
+    path = str(tmp_path / "flaky.jsonl")
+
+    def factory(task, records, workers=0, timeout_s=None):
+        pool = SubprocessExecutor(
+            WorkerSpec(factory=STUB, kwargs={"fail_when": FAIL_COND}),
+            workers=2)
+        return SettingsOracle(space, fn=None, executor=pool,
+                              own_executor=True, task=task.name,
+                              records=records)
+
+    task = TuningTask(name="flaky", space=space, oracle_factory=factory)
+    cfg = TunerConfig(iteration_opt=2, b_measure=6, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=8, seed=0)
+    r1 = Session(task, tuner=cfg, budget=12, records=path).run().single
+    assert r1.oracle_stats["misses"] > 0
+    assert np.isfinite(r1.best_latency)
+    # penalty rows never win the search
+    assert r1.best_latency < SettingsOracle.penalty_latency
+    r2 = Session(task, tuner=cfg, budget=12, records=path).run().single
+    assert r2.oracle_stats["misses"] == 0  # fully warm, incl. failure rows
+    assert r2.best_latency == r1.best_latency
+
+
+def test_env_conflict_between_specs_fails_loudly():
+    """A spec whose env pin contradicts what a worker already applied
+    (e.g. a different device count after jax initialized) must fail its
+    jobs instead of silently measuring on the wrong topology."""
+    a = WorkerSpec(factory=STUB, env={"REPRO_TEST_PIN": "1"})
+    b = WorkerSpec(factory=STUB, env={"REPRO_TEST_PIN": "2"})
+    with SubprocessExecutor(workers=1) as pool:
+        assert pool.submit("t", {"x": 1}, spec=a).result().ok
+        res = pool.submit("t", {"x": 2}, spec=b).result()
+        assert not res.ok and "WorkerEnvConflict" in res.error
+        # the worker itself survives; compatible jobs still run
+        assert pool.submit("t", {"x": 3}, spec=a).result().ok
+        assert pool.stats()["respawns"] == 0
+
+
+def test_malformed_result_records_penalty_not_crash(space):
+    """A measure fn returning a dict without step_penalized_s (or a
+    non-numeric value) is a failure row, not a session crash."""
+    oracle = SettingsOracle(space, fn=lambda s: {"step_s": 1.0}, task="bad")
+    lat, _ = oracle.measure(np.stack([_cfg()]))
+    assert lat[0] == oracle.penalty_latency
+    assert oracle.stats()["failures"] == 1
+    oracle2 = SettingsOracle(space, fn=lambda s: None, task="bad2")
+    lat2, _ = oracle2.measure(np.stack([_cfg()]))
+    assert lat2[0] == oracle2.penalty_latency
+    assert oracle2.stats()["failures"] == 1
+
+
+def test_session_shares_one_pool_across_tasks(space):
+    """Session(workers=N) hands every task the same executor — N worker
+    processes total, not N per task — and tears it down afterwards."""
+    seen = []
+
+    def make_task(name):
+        def factory(task, records, workers=0, timeout_s=None, executor=None):
+            seen.append(executor)
+            return SettingsOracle(space, fn=None, executor=executor,
+                                  own_executor=False, task=task.name,
+                                  worker_spec=WorkerSpec(factory=STUB))
+        return TuningTask(name=name, space=space, oracle_factory=factory)
+
+    cfg = TunerConfig(iteration_opt=2, b_measure=4, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=8, seed=1)
+    sr = Session([make_task("cellA"), make_task("cellB")], tuner=cfg,
+                 budget=8, workers=2).run()
+    assert len(seen) == 2
+    assert seen[0] is seen[1] and seen[0] is not None
+    assert seen[0].n_workers == 2
+    for rep in sr:
+        assert rep.n_measurements == 8
+        assert np.isfinite(rep.best_latency)
+        assert rep.oracle_stats["failures"] == 0
+    assert seen[0].stats()["workers_alive"] == 0  # closed with the session
+
+
+# ----------------------------------------------------------------- records
+
+def test_recordlog_drops_corrupt_trailing_line(tmp_path):
+    log = RecordLog(str(tmp_path / "rec.jsonl"))
+    log.append({"task": "t", "config": [0], "latency": 1.0, "features": []})
+    log.append({"task": "t", "config": [1], "latency": 2.0, "features": []})
+    with open(log.path, "a") as f:
+        f.write('{"task": "t", "config": [2], "lat')  # killed mid-append
+    rows = log.load()
+    assert [r["latency"] for r in rows] == [1.0, 2.0]
+    # a resumed run (fresh RecordLog on the same path) truncates the torn
+    # tail before its first append, so the new row lands on its own line
+    # instead of merging into the fragment (which would turn trailing
+    # corruption into an unrecoverable mid-file error)
+    resumed = RecordLog(log.path)
+    resumed.append({"task": "t", "config": [3], "latency": 3.0,
+                    "features": []})
+    assert [r["latency"] for r in resumed.load()] == [1.0, 2.0, 3.0]
+
+
+def test_recordlog_raises_on_midfile_corruption(tmp_path):
+    log = RecordLog(str(tmp_path / "rec.jsonl"))
+    with open(log.path, "w") as f:
+        f.write('not json at all\n')
+        f.write(json.dumps({"task": "t", "latency": 1.0}) + "\n")
+    with pytest.raises(ValueError, match="mid-file"):
+        log.load()
+
+
+def test_recordlog_append_is_single_complete_line(tmp_path):
+    log = RecordLog(str(tmp_path / "rec.jsonl"))
+    row = {"task": "t", "config": [1, 2], "latency": 0.5, "features": [0.1]}
+    log.append(row)
+    with open(log.path, "rb") as f:
+        data = f.read()
+    assert data.endswith(b"\n") and data.count(b"\n") == 1
+    assert json.loads(data.decode()) == row
+    assert os.path.getsize(log.path) == len(data)

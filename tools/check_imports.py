@@ -26,6 +26,10 @@ os.environ.setdefault("REPRO_DRYRUN_DEVICES", "2")
 REQUIRED = (
     "repro.compiler",
     "repro.compiler.cli",
+    "repro.compiler.executor",
+    "repro.compiler.executor.base",
+    "repro.compiler.executor.pool",
+    "repro.compiler.executor.stub",
     "repro.compiler.oracle",
     "repro.compiler.records",
     "repro.compiler.report",
