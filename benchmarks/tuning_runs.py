@@ -6,12 +6,19 @@ Results are cached as JSON under artifacts/tuning/ so table6 / fig5 / fig6 /
 fig7 all read one sweep.  REPRO_PAPER=1 switches to the full Table-4 budget
 (1024 measurements/task); the default budget (256) preserves every paper
 trend at ~6x less wall time.
+
+``--json-out BENCH_netopt.json`` instead runs the network-scope
+co-optimization benchmark (ResNet-18 coopt vs hw-frozen vs per-layer
+fantasy at equal budget) and writes the standardized bench-artifact
+document (:func:`write_bench_artifact`) — the ``BENCH_*.json`` convention
+perf-trajectory tooling diffs across commits.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
 from typing import Dict, Optional
 
 from repro.compiler import Session, TuningTask
@@ -20,6 +27,7 @@ from repro.core.task import Task, conv_tasks
 from repro.core.tuner import TunerConfig
 from repro.models import cnn
 
+BENCH_SCHEMA = "repro-bench/1"
 ART = os.environ.get("REPRO_ART", "artifacts/tuning")
 PAPER = os.environ.get("REPRO_PAPER", "0") == "1"
 # bump when the per-run row schema changes (2: TuneReport.to_dict rows,
@@ -118,14 +126,81 @@ def network_results(sweep: Dict) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def write_bench_artifact(path: str, bench: str, metrics: Dict[str, float],
+                         config: Dict) -> Dict:
+    """The standardized ``BENCH_*.json`` artifact: one flat document of
+
+        {"schema": "repro-bench/1", "bench": <name>, "created_unix": <ts>,
+         "config": {...what was run...}, "metrics": {name: float, ...}}
+
+    ``metrics`` is a flat name->float dict so trajectory tooling can diff
+    runs across commits without schema knowledge; put structure in names
+    (``coopt_network_latency_s``), not nesting."""
+    doc = {"schema": BENCH_SCHEMA, "bench": bench,
+           "created_unix": time.time(), "config": config,
+           "metrics": {k: float(v) for k, v in metrics.items()}}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {path}: " + " ".join(f"{k}={v:.3e}"
+                                       for k, v in doc["metrics"].items()),
+          flush=True)
+    return doc
+
+
+def netopt_bench(workers: int = 0, timeout_s: Optional[float] = None,
+                 layer_budget: int = 8, refine_budget: int = 8) -> Dict:
+    """ResNet-18 network co-optimization vs its equal-budget comparison
+    points; returns the flat metrics dict for the bench artifact."""
+    from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
+                                       network_hw_frozen_tune)
+    ncfg = NetOptConfig(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                        layer_budget=layer_budget,
+                        refine_budget=refine_budget, tuner=tuner_config())
+    tasks = TuningTask.conv_tasks("resnet-18")
+    t0 = time.perf_counter()
+    coopt = NetworkCoOptimizer(tasks, ncfg, workers=workers,
+                               timeout_s=timeout_s, name="resnet-18").run()
+    frozen = network_hw_frozen_tune(tasks, ncfg, workers=workers,
+                                    timeout_s=timeout_s, name="resnet-18")
+    fantasy = Session(tasks, tuner=ncfg.tuner,
+                      budget=ncfg.total_layer_budget(), workers=workers,
+                      timeout_s=timeout_s).run()
+    return {
+        "coopt_network_latency_s": coopt.network_latency,
+        "hw_frozen_network_latency_s": frozen.network_latency,
+        "fantasy_network_latency_s": fantasy.network_latency(),
+        "coopt_speedup_vs_frozen": (frozen.network_latency
+                                    / coopt.network_latency),
+        "coopt_hw_candidates": coopt.hw_candidates,
+        "coopt_measurements": coopt.total_measurements,
+        "budget_per_layer": ncfg.total_layer_budget(),
+        "wall_time_s": time.perf_counter() - t0,
+    }
+
+
 if __name__ == "__main__":
     from repro.compiler.executor import add_worker_args, validate_worker_args
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--force", action="store_true",
                     help="re-tune even if a cached sweep exists "
                          "(REPRO_FORCE=1 also works)")
+    ap.add_argument("--json-out", default=None, metavar="BENCH_netopt.json",
+                    help="run the netopt benchmark and write the "
+                         "standardized bench artifact here (skips the sweep)")
     add_worker_args(ap)
     args = ap.parse_args()
     validate_worker_args(ap, args)
-    run_sweep(force=args.force or os.environ.get("REPRO_FORCE", "0") == "1",
-              workers=args.workers, timeout_s=args.timeout_s)
+    if args.json_out:
+        metrics = netopt_bench(workers=args.workers,
+                               timeout_s=args.timeout_s)
+        write_bench_artifact(
+            args.json_out, "netopt_resnet18", metrics,
+            config={"paper": PAPER, "networks": ["resnet-18"],
+                    "budget_per_layer": metrics.pop("budget_per_layer")})
+    else:
+        run_sweep(force=args.force
+                  or os.environ.get("REPRO_FORCE", "0") == "1",
+                  workers=args.workers, timeout_s=args.timeout_s)

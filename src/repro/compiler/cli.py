@@ -1,24 +1,30 @@
 """Command-line entry point for tuning sessions.
 
+Two subcommands (a bare flag list still means ``tune``, so historical
+invocations keep working):
+
     # two ResNet-18 conv cells, shared GBT, 2-measurement smoke budget
-    PYTHONPATH=src python -m repro.compiler.cli \
+    PYTHONPATH=src python -m repro.compiler.cli tune \
         --model resnet-18 --max-tasks 2 --budget 2
 
     # one GEMM, AutoTVM baseline, persisted + resumable records
-    PYTHONPATH=src python -m repro.compiler.cli \
+    PYTHONPATH=src python -m repro.compiler.cli tune \
         --matmul 512x512x512 --algo autotvm --budget 64 \
         --records artifacts/gemm.jsonl
 
-    # pod-level compile oracle (expensive: one SPMD compile per measurement)
-    PYTHONPATH=src python -m repro.compiler.cli \
-        --arch qwen2-1.5b --shape train_4k --oracle compile --budget 8
-
-    # same, fanned across 4 crash-isolated measurement workers with a
-    # 300s per-compile timeout (timed-out/crashed measurements record the
-    # failure-penalty row; the pool respawns and the session keeps going)
-    PYTHONPATH=src python -m repro.compiler.cli \
+    # pod-level compile oracle fanned across 4 crash-isolated measurement
+    # workers with a 300s per-compile timeout
+    PYTHONPATH=src python -m repro.compiler.cli tune \
         --arch qwen2-1.5b --shape train_4k --oracle compile --budget 8 \
         --workers 4 --timeout-s 300
+
+    # network-scope co-optimization: ONE shared accelerator config for the
+    # whole network, per-layer software mappings under it (repro.compiler
+    # .netopt); --baseline runs the comparison points at equal budget
+    PYTHONPATH=src python -m repro.compiler.cli netopt \
+        --model resnet-18 --layer-budget 16 --records artifacts/r18.jsonl
+    PYTHONPATH=src python -m repro.compiler.cli netopt \
+        --model resnet-18 --baseline hw-frozen
 """
 from __future__ import annotations
 
@@ -32,6 +38,20 @@ from repro.compiler.session import ALGOS, Session
 from repro.compiler.task import TuningTask
 from repro.core.tuner import TunerConfig
 
+SUBCOMMANDS = ("tune", "netopt")
+
+
+def _conv_or_matmul_tasks(args) -> List[TuningTask]:
+    """Tasks from the flags shared by both subcommands."""
+    if args.model:
+        tasks = TuningTask.conv_tasks(args.model)
+        return tasks[:args.max_tasks] if args.max_tasks else tasks
+    tasks = []
+    for spec in args.matmul:
+        m, n, k = (int(x) for x in spec.lower().split("x"))
+        tasks.append(TuningTask.matmul(m, n, k))
+    return tasks
+
 
 def _tasks_from_args(args) -> List[TuningTask]:
     picked = [bool(args.model), bool(args.matmul), bool(args.arch)]
@@ -40,70 +60,134 @@ def _tasks_from_args(args) -> List[TuningTask]:
     if args.oracle == "compile" and not args.arch:
         raise SystemExit("--oracle compile requires --arch/--shape "
                          "(conv/GEMM tasks are measured analytically)")
-    if args.model:
-        tasks = TuningTask.conv_tasks(args.model)
-        return tasks[:args.max_tasks] if args.max_tasks else tasks
-    if args.matmul:
-        tasks = []
-        for spec in args.matmul:
-            m, n, k = (int(x) for x in spec.lower().split("x"))
-            tasks.append(TuningTask.matmul(m, n, k))
-        return tasks
+    if args.model or args.matmul:
+        return _conv_or_matmul_tasks(args)
     if args.oracle != "compile":
         raise SystemExit("--arch/--shape needs --oracle compile")
     return [TuningTask.cell(args.arch, s) for s in args.shape]
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.compiler.cli",
-        description="Unified tuning session over conv/GEMM analytical tasks "
-                    "or pod-level compile cells.")
+def _add_task_args(ap) -> None:
     ap.add_argument("--model", help="CNN model: tune its conv tasks "
                                     "(e.g. resnet-18)")
     ap.add_argument("--max-tasks", type=int, default=0,
                     help="cap the number of conv tasks (0 = all)")
     ap.add_argument("--matmul", action="append", default=[],
                     metavar="MxNxK", help="GEMM task (repeatable)")
-    ap.add_argument("--arch", help="LM arch for the compile oracle")
-    ap.add_argument("--shape", action="append", default=[],
-                    help="cell shape(s) for --arch (default train_4k)")
-    ap.add_argument("--oracle", choices=("analytical", "compile"),
-                    default="analytical")
-    ap.add_argument("--algo", choices=ALGOS, default="arco")
-    ap.add_argument("--budget", type=int, default=None,
-                    help="measurements per task")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-cs", action="store_true",
-                    help="ablate Confidence Sampling")
-    ap.add_argument("--independent", action="store_true",
-                    help="per-task GBT instead of the shared cost model")
-    ap.add_argument("--records", default=None,
-                    help="JSONL measurement records (persist + warm resume)")
-    add_worker_args(ap)
-    ap.add_argument("--out", default=None, help="write session JSON here")
-    args = ap.parse_args(argv)
-    validate_worker_args(ap, args)
+
+
+def _emit(summary, args) -> None:
+    """Shared JSON output: full document to --out, compact to stdout."""
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=1, default=str)
+    for rep in summary.get("reports", {}).values():  # keep stdout compact
+        rep.pop("measurements", None)
+        rep["history"] = rep["history"][-3:]
+    print(json.dumps(summary, indent=1, default=str))
+
+
+def _run_tune(args) -> int:
     if args.arch and not args.shape:
         args.shape = ["train_4k"]
-
     tasks = _tasks_from_args(args)
     session = Session(tasks, tuner=TunerConfig.fast(), algo=args.algo,
                       budget=args.budget, use_cs=not args.no_cs,
                       share_cost_model=not args.independent,
                       records=args.records, seed=args.seed,
                       workers=args.workers, timeout_s=args.timeout_s)
-    result = session.run()
-
-    summary = result.to_dict()
-    for rep in summary["reports"].values():  # keep stdout compact
-        rep.pop("measurements", None)
-        rep["history"] = rep["history"][-3:]
-    print(json.dumps(summary, indent=1, default=str))
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(result.to_dict(), f, indent=1, default=str)
+    _emit(session.run().to_dict(), args)
     return 0
+
+
+def _run_netopt(args) -> int:
+    from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
+                                       network_hw_frozen_tune,
+                                       network_random_hw_tune)
+    if bool(args.model) == bool(args.matmul):
+        raise SystemExit("netopt needs exactly one of --model / --matmul")
+    tasks = _conv_or_matmul_tasks(args)
+    cfg = NetOptConfig(seed_candidates=args.seed_candidates,
+                       hw_rounds=args.hw_rounds,
+                       hw_per_round=args.hw_per_round,
+                       layer_budget=args.layer_budget,
+                       refine_budget=args.refine_budget,
+                       tuner=TunerConfig.fast(), seed=args.seed)
+    name = args.model or ",".join(args.matmul)
+    kw = dict(records=args.records, workers=args.workers,
+              timeout_s=args.timeout_s, name=name)
+    if args.baseline == "hw-frozen":
+        rep = network_hw_frozen_tune(tasks, cfg, **kw)
+    elif args.baseline == "random-hw":
+        rep = network_random_hw_tune(tasks, cfg, **kw)
+    else:
+        rep = NetworkCoOptimizer(tasks, cfg, **kw).run()
+    print(rep.summary(), file=sys.stderr)
+    _emit(rep.to_dict(), args)
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0].startswith("-") and argv[0] not in ("-h", "--help"):
+        argv = ["tune"] + argv  # legacy flag-only invocation
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.compiler.cli",
+        description="Unified tuning sessions (tune) and network-scope "
+                    "HW/SW co-optimization (netopt).")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    tune = sub.add_parser(
+        "tune", help="tuning session over conv/GEMM analytical tasks or "
+                     "pod-level compile cells")
+    _add_task_args(tune)
+    tune.add_argument("--arch", help="LM arch for the compile oracle")
+    tune.add_argument("--shape", action="append", default=[],
+                      help="cell shape(s) for --arch (default train_4k)")
+    tune.add_argument("--oracle", choices=("analytical", "compile"),
+                      default="analytical")
+    tune.add_argument("--algo", choices=ALGOS, default="arco")
+    tune.add_argument("--budget", type=int, default=None,
+                      help="measurements per task")
+    tune.add_argument("--seed", type=int, default=0)
+    tune.add_argument("--no-cs", action="store_true",
+                      help="ablate Confidence Sampling")
+    tune.add_argument("--independent", action="store_true",
+                      help="per-task GBT instead of the shared cost model")
+    tune.add_argument("--records", default=None,
+                      help="JSONL measurement records (persist + warm resume)")
+    add_worker_args(tune)
+    tune.add_argument("--out", default=None, help="write session JSON here")
+    tune.set_defaults(run=_run_tune)
+
+    net = sub.add_parser(
+        "netopt", help="network co-optimization: one shared accelerator "
+                       "config, per-layer software mappings")
+    _add_task_args(net)
+    net.add_argument("--baseline", choices=("hw-frozen", "random-hw"),
+                     default=None,
+                     help="run a network-level baseline instead of the "
+                          "co-optimizer (equal total budget)")
+    net.add_argument("--seed-candidates", type=int, default=3,
+                     help="round-0 hw candidates (incl. the default chip)")
+    net.add_argument("--hw-rounds", type=int, default=2,
+                     help="CS-guided outer rounds after seeding")
+    net.add_argument("--hw-per-round", type=int, default=2,
+                     help="hw candidates measured per CS round")
+    net.add_argument("--layer-budget", type=int, default=16,
+                     help="software measurements per layer per candidate")
+    net.add_argument("--refine-budget", type=int, default=32,
+                     help="extra winner budget per layer (warm resume)")
+    net.add_argument("--seed", type=int, default=0)
+    net.add_argument("--records", default=None,
+                     help="JSONL records: per-(hw, layer) warm resume")
+    add_worker_args(net)
+    net.add_argument("--out", default=None, help="write NetworkReport JSON")
+    net.set_defaults(run=_run_netopt)
+
+    args = ap.parse_args(argv)
+    validate_worker_args(ap, args)
+    return args.run(args)
 
 
 if __name__ == "__main__":

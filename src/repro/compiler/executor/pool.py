@@ -23,6 +23,7 @@ queued work to give it.
 from __future__ import annotations
 
 import collections
+import math
 import os
 import time
 import traceback
@@ -95,12 +96,33 @@ def _worker_main(conn) -> None:
             conn.send((job_id, True, out))
 
 
+def adaptive_inflight(workers: int, ema_duration_s: Optional[float],
+                      lead_s: float = 0.25, max_depth: int = 8) -> int:
+    """In-flight bound from observed measurement durations.
+
+    The bound balances two failure modes: *short* measurements starve the
+    pool between parent service pumps unless a deep queue keeps workers
+    fed, while *long* measurements (SPMD compiles) should keep the classic
+    shallow bound so ``submit`` hands control back to the parent quickly
+    (overlapping MAPPO/GBT work) and queued work tracks the freshest
+    surrogate.  The queue is sized to ~``lead_s`` seconds of work per
+    worker on top of the one job each runs, clamped to [2, ``max_depth``]x
+    the worker count; with no observations yet it is the historical
+    ``2 * workers`` default.
+    """
+    if ema_duration_s is None:
+        return 2 * workers
+    depth = 1 + math.ceil(lead_s / max(ema_duration_s, 1e-6))
+    return workers * int(min(max(depth, 2), max_depth))
+
+
 class _Job:
-    __slots__ = ("handle", "deadline")
+    __slots__ = ("handle", "deadline", "started")
 
     def __init__(self, handle: MeasureHandle):
         self.handle = handle
         self.deadline: Optional[float] = None  # set at dispatch time
+        self.started: Optional[float] = None   # set at the worker's ack
 
 
 class _Worker:
@@ -129,8 +151,12 @@ class SubprocessExecutor(Executor):
                        after ``timeout_s + startup_grace_s``.
     ``max_inflight``   bound on submitted-but-unresolved jobs; ``submit``
                        blocks (servicing the pool) once it is reached.
-                       Defaults to ``2 * workers`` so the pool never idles
-                       between batches while the parent stays bounded.
+                       ``None`` (default) adapts the bound to observed
+                       measurement durations (``adaptive_inflight``):
+                       starts at the classic ``2 * workers`` and deepens
+                       up to ``8 * workers`` for sub-second measurements
+                       that would otherwise starve the pool between
+                       service pumps; an explicit int pins the bound.
     """
 
     _POLL_S = 0.02  # service granularity when blocking
@@ -145,7 +171,8 @@ class SubprocessExecutor(Executor):
         self.n_workers = int(workers)
         self.timeout_s = timeout_s
         self.startup_grace_s = startup_grace_s
-        self.max_inflight = max_inflight or 2 * self.n_workers
+        self.max_inflight = max_inflight  # None = adaptive
+        self._ema_duration_s: Optional[float] = None
         self.respawns = 0  # workers killed (timeout) or found dead (crash)
         self._ctx = get_context("spawn")
         self._workers: List[_Worker] = []
@@ -167,7 +194,7 @@ class SubprocessExecutor(Executor):
         self._next_id += 1
         self._queue.append(_Job(handle))
         self._dispatch()
-        while self._inflight() >= self.max_inflight:
+        while self._inflight() >= self._inflight_limit():
             self._service(self._POLL_S)
         return handle
 
@@ -222,9 +249,24 @@ class SubprocessExecutor(Executor):
                 "respawns": self.respawns,
                 "queued": len(self._queue),
                 "running": sum(1 for w in self._workers
-                               if w.job is not None)}
+                               if w.job is not None),
+                "max_inflight": self._inflight_limit()}
 
     # ------------------------------------------------------------ internals
+    def _inflight_limit(self) -> int:
+        if self.max_inflight is not None:
+            return self.max_inflight
+        return adaptive_inflight(self.n_workers, self._ema_duration_s)
+
+    def _observe_duration(self, duration_s: float) -> None:
+        """Fold one measurement's ack-to-result duration into the EMA the
+        adaptive in-flight bound is computed from."""
+        if self._ema_duration_s is None:
+            self._ema_duration_s = duration_s
+        else:
+            self._ema_duration_s = (0.7 * self._ema_duration_s
+                                    + 0.3 * duration_s)
+
     def _inflight(self) -> int:
         return len(self._queue) + sum(1 for w in self._workers
                                       if w.job is not None)
@@ -315,9 +357,10 @@ class SubprocessExecutor(Executor):
                     # measurement begins now: restart the clock so worker
                     # start-up (spawn + jax/factory import) is not billed
                     # to this configuration
-                    if (msg[1] == w.job.handle.job_id
-                            and w.job.deadline is not None):
-                        w.job.deadline = time.monotonic() + self.timeout_s
+                    if msg[1] == w.job.handle.job_id:
+                        w.job.started = time.monotonic()
+                        if w.job.deadline is not None:
+                            w.job.deadline = w.job.started + self.timeout_s
                     continue
                 job_id, ok, payload = msg
                 if job_id != w.job.handle.job_id:
@@ -325,6 +368,8 @@ class SubprocessExecutor(Executor):
                     # worker cannot happen (workers are killed on
                     # timeout), but guard against protocol drift
                     continue
+                if w.job.started is not None:  # feed the adaptive bound
+                    self._observe_duration(time.monotonic() - w.job.started)
                 w.job.handle._resolve(
                     MeasureResult(ok=bool(ok), value=payload if ok else None,
                                   error="" if ok else str(payload)))

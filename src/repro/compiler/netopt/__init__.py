@@ -1,0 +1,35 @@
+"""``repro.compiler.netopt`` — network-scope HW/SW co-optimization.
+
+One shared accelerator configuration for the whole DNN, per-layer
+software mappings under it: an outer hardware-candidate search
+(network-scope GBT + Confidence Sampling over the global hardware value
+lists) drives inner pinned-subspace :class:`~repro.compiler.session.
+Session`\\ s (``DesignSpace.pin`` per layer, shared software GBT, one
+worker pool, per-(hw, layer) JSONL warm resume).  Result is a typed
+:class:`NetworkReport`: chosen chip, per-layer mappings, end-to-end
+multiplicity-weighted latency, hardware-candidate Pareto trace.
+
+Quickstart::
+
+    from repro.compiler import TuningTask
+    from repro.compiler.netopt import NetworkCoOptimizer, NetOptConfig
+    rep = NetworkCoOptimizer(TuningTask.conv_tasks("resnet-18"),
+                             NetOptConfig(layer_budget=16),
+                             records="artifacts/r18.netopt.jsonl",
+                             name="resnet-18").run()
+    print(rep.summary())           # one chip, 17 layers, end-to-end us
+
+CLI: ``python -m repro.compiler.cli netopt --model resnet-18``.
+"""
+from repro.compiler.netopt.hwspace import (HW_KNOB_NAMES, HW_KNOBS,
+                                           HwCandidateSpace, hw_dict, hw_tag)
+from repro.compiler.netopt.loop import (NetOptConfig, NetworkCoOptimizer,
+                                        netopt_tune, network_hw_frozen_tune,
+                                        network_random_hw_tune)
+from repro.compiler.netopt.report import NetworkReport
+
+__all__ = [
+    "HW_KNOBS", "HW_KNOB_NAMES", "HwCandidateSpace", "hw_dict", "hw_tag",
+    "NetOptConfig", "NetworkCoOptimizer", "NetworkReport", "netopt_tune",
+    "network_hw_frozen_tune", "network_random_hw_tune",
+]

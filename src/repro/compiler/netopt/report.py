@@ -1,0 +1,75 @@
+"""Typed, JSON-serializable result of a network-scope co-optimization.
+
+A :class:`NetworkReport` is to ``repro.compiler.netopt`` what
+:class:`~repro.compiler.report.TuneReport` is to one task: the chosen
+shared hardware config, every layer's software mapping under it,
+multiplicity-weighted end-to-end latency, and the hardware-candidate
+trace (with its Pareto / best-so-far frontier over measurement spend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class NetworkReport:
+    """Result of co-optimizing one network on one shared accelerator."""
+
+    network: str
+    algo: str                        # "netopt" | "hw_frozen" | "random_hw"
+    hw_config: Dict[str, int]        # the ONE shared geometry (knob values)
+    # per unique task: {"mapping": software knob settings,
+    #                   "hardware": the shared hw_config (identical rows),
+    #                   "hw_utilized": per-layer clamped tile actually
+    #                                  exercised (<= hardware, small layers
+    #                                  underutilize the shared dimension),
+    #                   "latency": best per-layer latency (s),
+    #                   "multiplicity": layers sharing this workload}
+    layers: Dict[str, Dict[str, object]]
+    network_latency: float           # sum(latency * multiplicity), seconds
+    n_layers: int                    # sum of multiplicities
+    hw_candidates: int               # distinct hardware configs evaluated
+    total_measurements: int          # new oracle measurements paid (misses)
+    wall_time_s: float
+    # one row per candidate evaluation, in evaluation order:
+    # {"hw": {...}, "network_latency": float, "new_measurements": int,
+    #  "cum_measurements": int, "best_so_far": float, "phase": "seed" |
+    #  "cs" | "refine" | "frozen" | "random"}
+    trace: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------- queries
+    def verify_shared_hardware(self) -> bool:
+        """True iff every layer's mapping runs on the SAME hardware config
+        (the co-optimization invariant the per-layer-fantasy sum violates)."""
+        return all(layer["hardware"] == self.hw_config
+                   for layer in self.layers.values())
+
+    def pareto(self) -> List[Tuple[int, float]]:
+        """Best-so-far frontier over measurement spend:
+        (cum_measurements, network_latency) rows where a candidate improved
+        on everything evaluated before it."""
+        out: List[Tuple[int, float]] = []
+        best = float("inf")
+        for row in self.trace:
+            if row["network_latency"] < best:
+                best = float(row["network_latency"])
+                out.append((int(row["cum_measurements"]), best))
+        return out
+
+    # --------------------------------------------------------------- (de)ser
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "NetworkReport":
+        fields = {f.name for f in dataclasses.fields(NetworkReport)}
+        return NetworkReport(**{k: v for k, v in d.items() if k in fields})
+
+    def summary(self) -> str:
+        hw = ", ".join(f"{k}={v}" for k, v in self.hw_config.items())
+        return (f"{self.algo}: {self.network} on [{hw}] -> "
+                f"{self.network_latency * 1e6:.1f} us over {self.n_layers} "
+                f"layers ({self.hw_candidates} hw candidate(s), "
+                f"{self.total_measurements} measurements, "
+                f"{self.wall_time_s:.1f}s)")

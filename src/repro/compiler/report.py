@@ -32,6 +32,9 @@ class TuneReport:
     measurements: List[Tuple[int, float]]
     best_settings: Optional[Dict[str, object]] = None  # decoded knob values
     oracle_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # layers sharing this workload (from TuningTask.multiplicity) — what
+    # SessionReport.network_latency() weights per-task bests by
+    multiplicity: int = 1
 
     def best_gflops(self, space: DesignSpace) -> float:
         if space.kind == "conv2d":

@@ -74,6 +74,13 @@ class SessionReport:
         return sum(r.best_latency * mult.get(name, 1)
                    for name, r in self.reports.items())
 
+    def network_latency(self) -> float:
+        """End-to-end network latency: per-task bests weighted by each
+        task's own layer multiplicity (``TuningTask.multiplicity``, carried
+        on the reports) — no hand-built multiplicity dict needed."""
+        return sum(r.best_latency * r.multiplicity
+                   for r in self.reports.values())
+
     def to_dict(self) -> Dict:
         return {"algo": self.algo, "shared_cost_model": self.shared_cost_model,
                 "budget_per_task": self.budget_per_task,
@@ -99,7 +106,9 @@ class Session:
                  share_cost_model: bool = True,
                  records: Union[None, str, RecordLog] = None,
                  seed: Optional[int] = None,
-                 workers: int = 0, timeout_s: Optional[float] = None):
+                 workers: int = 0, timeout_s: Optional[float] = None,
+                 gbt: Optional[GBTModel] = None,
+                 executor=None):
         if isinstance(tasks, TuningTask):
             tasks = [tasks]
         self.tasks = list(tasks)
@@ -120,13 +129,20 @@ class Session:
         self.share_cost_model = share_cost_model
         self.records = (RecordLog(records) if isinstance(records, str)
                         else records)
-        if timeout_s is not None and not workers:
+        if timeout_s is not None and not workers and executor is None:
             raise ValueError("timeout_s needs workers >= 1: in-process "
                              "measurements cannot be preempted")
         self.workers = workers
         self.timeout_s = timeout_s
+        # an externally supplied cost model is shared across this session's
+        # tasks AND whoever else holds it (netopt shares one software GBT
+        # across every hardware candidate's session)
+        self.gbt = gbt
         self._oracles = []  # created by run(), closed in its finally
-        self._executor = None  # ONE worker pool shared by all tasks
+        # ONE worker pool shared by all tasks; an external executor= is the
+        # caller's pool (outlives the session — never closed here)
+        self._executor = executor
+        self._own_executor = executor is None
 
     def _make_oracle(self, task: TuningTask):
         oracle = task.make_oracle(self.records, workers=self.workers,
@@ -138,10 +154,10 @@ class Session:
     # ----------------------------------------------------------------- run
     def run(self) -> SessionReport:
         t0 = time.perf_counter()
-        shared_gbt = (GBTModel(n_rounds=self.cfg.gbt_rounds,
-                               seed=self.cfg.seed)
-                      if self.share_cost_model else None)
-        if self.workers > 0:
+        shared_gbt = self.gbt if self.gbt is not None else (
+            GBTModel(n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed)
+            if self.share_cost_model else None)
+        if self.workers > 0 and self._executor is None:
             # one pool for the whole session — N workers total, not
             # N per task; jobs carry each oracle's own WorkerSpec.
             # Workers spawn lazily, so this is free for tasks that never
@@ -158,9 +174,11 @@ class Session:
             for oracle in self._oracles:  # tear down any worker pools
                 oracle.close()
             self._oracles = []
-            if self._executor is not None:
+            if self._executor is not None and self._own_executor:
                 self._executor.close()
                 self._executor = None
+        for t in self.tasks:  # reports carry their task's layer weight
+            reports[t.name].multiplicity = t.multiplicity
         return SessionReport(reports=reports,
                              wall_time_s=time.perf_counter() - t0,
                              algo=self.algo,

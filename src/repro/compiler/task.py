@@ -60,6 +60,16 @@ class TuningTask:
         (cross-task transfer). Exposed for inspection/diagnostics."""
         return np.asarray(self.space.workload_features(), np.float32)
 
+    def pinned(self, knob_idxs, values, tag: str) -> "TuningTask":
+        """This task with knobs frozen at shared *values*
+        (``DesignSpace.pin``) — e.g. one network-wide hardware config.  The
+        name gains ``#tag`` so oracle caches and JSONL records key per
+        (pin, task): revisiting the same pin replays from cache.
+        Multiplicity and the oracle factory carry over (factories build
+        from ``task.space``, which is now the pinned subspace)."""
+        return dataclasses.replace(self, name=f"{self.name}#{tag}",
+                                   space=self.space.pin(knob_idxs, values))
+
     # ---------------------------------------------------------- constructors
     @staticmethod
     def from_space(name: str, space: DesignSpace,

@@ -100,6 +100,41 @@ def decode_action(agent: str, action: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(digits[::-1], axis=-1).astype(jnp.int32)
 
 
+def delta_table(agent: str) -> np.ndarray:
+    """Static (n_actions, k) table of the per-knob deltas each categorical
+    action decodes to (same base-3 encoding as ``decode_action``)."""
+    k = AGENT_N_KNOBS[agent]
+    a = np.arange(AGENT_N_ACTIONS[agent])
+    digits = []
+    for _ in range(k):
+        digits.append(a % 3 - 1)
+        a = a // 3
+    return np.stack(digits[::-1], axis=-1).astype(np.int32)
+
+
+def action_mask(agent: str, pinned: jnp.ndarray) -> jnp.ndarray:
+    """(n_actions,) bool — actions that move no *pinned* knob.
+
+    Pinned-subspace action heads: on a ``DesignSpace.pin``-ed task the
+    owning agent's head is masked down to the joint adjustments of its
+    unpinned knobs (an all-pinned agent keeps exactly the no-op action),
+    so exploration and entropy are spent only where the space can move.
+    ``pinned`` is a traced (N_KNOBS,) bool array — shapes stay static, a
+    single compilation serves pinned and unpinned tasks alike.
+    """
+    tab = jnp.asarray(delta_table(agent))               # (A, k) static
+    own = pinned[jnp.asarray(AGENT_KNOBS[agent])]       # (k,) traced
+    return jnp.all((tab == 0) | ~own, axis=-1)
+
+
+def masked_policy_logits(agent: str, params, obs: jnp.ndarray,
+                         pinned: jnp.ndarray) -> jnp.ndarray:
+    """Policy logits with pinned-knob actions masked to -1e9 (a finite
+    sentinel: softmax underflows it to exactly 0 without inf*0 NaNs)."""
+    logits = policy_logits(params, obs)
+    return jnp.where(action_mask(agent, pinned), logits, -1e9)
+
+
 def combined_deltas(actions: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     """Merge per-agent deltas into a full (..., N_KNOBS) delta vector."""
     shape = actions[AGENTS[0]].shape

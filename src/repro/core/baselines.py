@@ -48,7 +48,31 @@ def default_hardware_config(space: DesignSpace) -> np.ndarray:
     return idx
 
 
+def default_hardware_values(space: DesignSpace) -> np.ndarray:
+    """Default accelerator geometry as knob *values* (not choice indices) —
+    the form a network-wide shared hardware config takes, since choice
+    tables differ per layer but the chip is one."""
+    idx = default_hardware_config(space)
+    return np.asarray([space.choices[k][i] for k, i in zip(HW_KNOBS, idx)],
+                      np.int64)
+
+
+def hw_pinned_space(space: DesignSpace,
+                    values: Optional[np.ndarray] = None) -> DesignSpace:
+    """The software-only subspace as a first-class ``DesignSpace``: hardware
+    knobs pinned (``DesignSpace.pin``) at ``values`` (default geometry when
+    None).  The pinned space shrinks multiplicatively and masks the MAPPO
+    hardware head — this is what ``repro.compiler.netopt`` runs per layer
+    under each shared hardware candidate."""
+    if values is None:
+        values = default_hardware_values(space)
+    return space.pin(HW_KNOBS, values)
+
+
 def frozen_mask_and_base(space: DesignSpace) -> Tuple[np.ndarray, np.ndarray]:
+    """Index-space view of ``hw_pinned_space``: (frozen mask, base indices)
+    for tuners that draw in the *full* space and overwrite the hardware
+    slots (keeps their records/configs index-compatible with ARCO's)."""
     frozen = np.zeros(N_KNOBS, bool)
     frozen[HW_KNOBS] = True
     base = np.zeros(N_KNOBS, np.int64)
@@ -339,3 +363,39 @@ def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
         track.record(cand, lat)
         gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
     return track.report(oracle=oracle)
+
+
+# --------------------------------------------------------------------------
+# Network-level hardware baselines (the netopt comparison points)
+# --------------------------------------------------------------------------
+# Implemented on the netopt machinery (imported lazily: netopt depends on
+# this module for the per-layer tuners, so a module-level import would
+# close a cycle).
+
+def network_hw_frozen_tune(tasks, cfg=None, records=None, workers: int = 0,
+                           timeout_s=None, name: str = "network"):
+    """Network-scope hardware-frozen baseline: ONE shared default
+    accelerator geometry for every layer, with the co-optimizer's entire
+    per-layer measurement budget spent on software mapping under that
+    frozen chip.  The fair comparison for ``repro.compiler.netopt`` — the
+    network-scope analog of pinning AutoTVM/CHAMELEON to the default VTA++
+    spec (§4.1), run with ARCO's own software agents so only the hardware
+    search differs."""
+    from repro.compiler.netopt import loop as _netopt
+    return _netopt.network_hw_frozen_tune(tasks, cfg=cfg, records=records,
+                                          workers=workers,
+                                          timeout_s=timeout_s, name=name)
+
+
+def network_random_hw_tune(tasks, cfg=None, n_candidates: int = 4,
+                           records=None, workers: int = 0, timeout_s=None,
+                           name: str = "network"):
+    """Network-scope random-hardware baseline: the same shared-chip
+    evaluation loop as netopt but with uniformly drawn hardware candidates
+    instead of the GBT + Confidence-Sampling outer search — the ablation
+    separating 'searching hardware at all' from 'searching it well'."""
+    from repro.compiler.netopt import loop as _netopt
+    return _netopt.network_random_hw_tune(tasks, cfg=cfg,
+                                          n_candidates=n_candidates,
+                                          records=records, workers=workers,
+                                          timeout_s=timeout_s, name=name)

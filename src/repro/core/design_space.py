@@ -58,6 +58,10 @@ class DesignSpace:
     workload: Dict[str, int]                   # static task description
     kind: str                                  # "conv2d" | "matmul"
     spec: TpuSpec = DEFAULT
+    # per-knob pin mask set by ``pin()``: pinned knobs carry exactly one
+    # choice and the MAPPO action heads mask their adjustments out.  None
+    # (the default) means no knob was explicitly pinned.
+    pinned: Tuple[bool, ...] = None
 
     # ---------------------------------------------------------- construction
     @staticmethod
@@ -140,6 +144,43 @@ class DesignSpace:
         knob = jax.random.randint(k_rng, (), 0, self.n_knobs)
         delta = jax.random.choice(d_rng, jnp.asarray([-1, 1], jnp.int32))
         return self.clip(config.at[knob].add(delta))
+
+    # ---------------------------------------------------------------- pinning
+    def pinned_mask(self) -> np.ndarray:
+        """(n_knobs,) bool — knobs frozen by ``pin()`` (all False if none)."""
+        if self.pinned is None:
+            return np.zeros(self.n_knobs, bool)
+        return np.asarray(self.pinned, bool)
+
+    def nearest_choice(self, knob: int, value: float) -> int:
+        """Index of the choice closest to ``value`` in log2 distance (knob
+        tables are powers of two, so log-space nearest is the natural
+        rounding — an oversized value clamps to the largest choice)."""
+        vals = np.asarray(self.choices[knob], np.float64)
+        return int(np.argmin(np.abs(np.log2(np.maximum(vals, 1e-9))
+                                    - math.log2(max(float(value), 1e-9)))))
+
+    def pin(self, knob_idxs: Sequence[int],
+            values: Sequence[float]) -> "DesignSpace":
+        """Freeze knobs at fixed *values*: each pinned knob's choice list
+        collapses to the single nearest available choice, so the search
+        space shrinks multiplicatively and the MAPPO action heads mask the
+        pinned adjustments out (``mappo.EnvParams.pinned``).
+
+        A value outside a knob's table clamps to the nearest choice — e.g.
+        a network-wide ``tile_ci=64`` on a 3-input-channel layer pins to
+        that layer's largest feasible Ci-tile (the layer underutilizes the
+        shared accelerator dimension).  Pinning composes: already-pinned
+        knobs stay pinned.
+        """
+        choices = list(self.choices)
+        pinned = [bool(x) for x in self.pinned_mask()]
+        for k, v in zip(knob_idxs, values):
+            k = int(k)
+            choices[k] = (self.choices[k][self.nearest_choice(k, v)],)
+            pinned[k] = True
+        return dataclasses.replace(self, choices=tuple(choices),
+                                   pinned=tuple(pinned))
 
     # --------------------------------------------------------------- fitness
     def latency_fn(self) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:

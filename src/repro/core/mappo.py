@@ -40,6 +40,7 @@ class EnvParams(NamedTuple):
     khkw: jnp.ndarray          # () float32 — kernel window area (K-tile factor)
     vmem_limit: jnp.ndarray    # () float32
     penalty_lam: jnp.ndarray   # () float32
+    pinned: jnp.ndarray        # (N_KNOBS,) bool — DesignSpace.pin mask
 
 
 def env_params_from_space(space: DesignSpace, lam: float = 1e-7) -> EnvParams:
@@ -52,6 +53,7 @@ def env_params_from_space(space: DesignSpace, lam: float = 1e-7) -> EnvParams:
         khkw=jnp.asarray(khkw, jnp.float32),
         vmem_limit=jnp.asarray(float(space.spec.vmem_bytes), jnp.float32),
         penalty_lam=jnp.asarray(lam, jnp.float32),
+        pinned=jnp.asarray(space.pinned_mask()),
     )
 
 
@@ -121,7 +123,8 @@ def rollout(params, rng, env: EnvParams, forest: CM.Forest,
         obs, acts, logps = {}, {}, {}
         for i, agent in enumerate(AGENTS):
             o = A.local_obs(agent, config, env.n_choices, env.wfeat)
-            logits = A.policy_logits(params[agent], o)
+            logits = A.masked_policy_logits(agent, params[agent], o,
+                                            env.pinned)
             a = jax.random.categorical(rngs[i], logits, axis=-1)
             lp = jax.nn.log_softmax(logits, axis=-1)
             obs[agent] = o
@@ -159,11 +162,15 @@ def gae(rewards: jnp.ndarray, values: jnp.ndarray, last_value: jnp.ndarray,
     return advs, advs + values
 
 
-def ppo_loss(params, traj: Trajectory, advs, returns, hp: MappoConfig):
+def ppo_loss(params, traj: Trajectory, advs, returns, env: EnvParams,
+             hp: MappoConfig):
     adv_n = (advs - advs.mean()) / (advs.std() + 1e-8)
     total_pg, total_ent = 0.0, 0.0
     for agent in AGENTS:
-        logits = A.policy_logits(params[agent], traj.obs[agent])
+        # same pinned-action mask as the rollout, so ratios and entropy
+        # are computed over the reachable action set only
+        logits = A.masked_policy_logits(agent, params[agent],
+                                        traj.obs[agent], env.pinned)
         lp_all = jax.nn.log_softmax(logits, axis=-1)
         lp = jnp.take_along_axis(lp_all, traj.actions[agent][..., None],
                                  -1)[..., 0]
@@ -199,7 +206,7 @@ def train_episode(params, opt_state, rng, env: EnvParams, forest: CM.Forest,
     stats = {}
     for _ in range(hp.epochs):
         (loss, stats), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
-            params, traj, advs, returns, hp)
+            params, traj, advs, returns, env, hp)
         params, opt_state = opt.update(grads, opt_state, params)
     visited = traj.configs.reshape(-1, N_KNOBS)
     stats = dict(stats, loss=loss, mean_reward=traj.rewards.mean())

@@ -1,0 +1,82 @@
+"""``python -m repro.compiler.cli`` — argparse smoke + JSON round-trips.
+
+Runs ``main(argv)`` in-process (no subprocess spawn, no jax re-init) at
+2-measurement budgets: the ``tune`` subcommand, its legacy flag-only
+spelling, the new ``netopt`` subcommand and its baselines, and the
+``--out`` JSON documents round-tripping through the typed reports.
+"""
+import json
+
+import pytest
+
+from repro.compiler.cli import main
+from repro.compiler.netopt import NetworkReport
+from repro.compiler.session import SessionReport
+
+
+def test_tune_smoke_and_json_roundtrip(tmp_path, capsys):
+    out = tmp_path / "session.json"
+    rc = main(["tune", "--matmul", "64x64x64", "--budget", "2",
+               "--out", str(out)])
+    assert rc == 0
+    # stdout is compact JSON (measurements stripped, history truncated)
+    stdout = json.loads(capsys.readouterr().out)
+    assert list(stdout["reports"]) == ["matmul_64x64x64"]
+    assert "measurements" not in stdout["reports"]["matmul_64x64x64"]
+    # the --out document is the full report and round-trips typed
+    sr = SessionReport.from_dict(json.loads(out.read_text()))
+    rep = sr.single
+    assert rep.n_measurements == 2
+    assert rep.best_latency > 0
+    assert sr.network_latency() == rep.best_latency  # multiplicity 1
+
+
+def test_tune_legacy_flags_without_subcommand(capsys):
+    rc = main(["--matmul", "64x64x64", "--budget", "2"])
+    assert rc == 0
+    assert "matmul_64x64x64" in json.loads(capsys.readouterr().out)["reports"]
+
+
+def test_tune_rejects_ambiguous_task_flags(capsys):
+    with pytest.raises(SystemExit):
+        main(["tune", "--model", "resnet-18", "--matmul", "8x8x8"])
+    capsys.readouterr()
+
+
+def test_tune_timeout_without_workers_errors(capsys):
+    with pytest.raises(SystemExit):
+        main(["tune", "--matmul", "8x8x8", "--timeout-s", "5"])
+    capsys.readouterr()
+
+
+def test_netopt_smoke_and_json_roundtrip(tmp_path, capsys):
+    out = tmp_path / "net.json"
+    rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "2",
+               "--seed-candidates", "2", "--hw-rounds", "0",
+               "--layer-budget", "2", "--refine-budget", "2",
+               "--out", str(out)])
+    assert rc == 0
+    stdout = json.loads(capsys.readouterr().out)
+    rep = NetworkReport.from_dict(json.loads(out.read_text()))
+    assert rep.to_dict() == stdout
+    assert rep.algo == "netopt"
+    assert len(rep.layers) == 2
+    assert rep.verify_shared_hardware()
+    assert rep.network_latency == pytest.approx(sum(
+        l["latency"] * l["multiplicity"] for l in rep.layers.values()))
+    assert rep.trace and rep.pareto()
+
+
+def test_netopt_baseline_hw_frozen(capsys):
+    rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "1",
+               "--seed-candidates", "1", "--hw-rounds", "0",
+               "--layer-budget", "2", "--refine-budget", "0",
+               "--baseline", "hw-frozen"])
+    assert rc == 0
+    rep = NetworkReport.from_dict(json.loads(capsys.readouterr().out))
+    assert rep.algo == "hw_frozen"
+    assert rep.hw_candidates == 1
+    assert rep.trace[0]["phase"] == "frozen"
+    # equal-budget contract: the single frozen chip gets the co-optimizer's
+    # whole upper-bound budget, (n_candidates + 1) * layer_budget + refine
+    assert rep.trace[0]["layer_budget"] == (1 + 1) * 2 + 0

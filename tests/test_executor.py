@@ -81,6 +81,39 @@ def test_subprocess_bad_factory_fails_jobs_not_pool():
         assert pool.stats()["respawns"] == 0
 
 
+# ------------------------------------------------- adaptive in-flight depth
+
+def test_adaptive_inflight_policy():
+    """The pure policy: classic 2x with no observations, 2x floor for long
+    measurements (compiles), deepens toward the 8x cap as measurements get
+    short relative to the service lead."""
+    from repro.compiler.executor.pool import adaptive_inflight
+    assert adaptive_inflight(2, None) == 4          # no data: 2 * workers
+    assert adaptive_inflight(2, 60.0) == 4          # long compiles: floor
+    assert adaptive_inflight(2, 0.001) == 16        # fast stubs: 8x cap
+    assert adaptive_inflight(3, 0.2) == 9           # 1 + ceil(.25/.2) = 3x
+    assert adaptive_inflight(1, 0.05) == 6          # 1 + ceil(.25/.05) = 6x
+
+
+def test_pool_adapts_inflight_from_observed_durations(space):
+    """With ``max_inflight=None`` the pool starts at the classic 2x bound
+    and deepens once observed measurement durations show the jobs are
+    cheap; an explicit ``max_inflight`` stays pinned."""
+    spec = WorkerSpec(factory=STUB, kwargs={"delay_s": 0.01})
+    with SubprocessExecutor(spec, workers=2) as pool:
+        assert pool.stats()["max_inflight"] == 4  # nothing observed yet
+        handles = [pool.submit("t", decode_config(space, _cfg(0, i % 5)))
+                   for i in range(8)]
+        pool.drain(handles)
+        assert all(h.result().ok for h in handles)
+        assert pool.stats()["max_inflight"] > 4   # grew for fast jobs
+    with SubprocessExecutor(spec, workers=2, max_inflight=3) as pool:
+        handles = [pool.submit("t", decode_config(space, _cfg(0, i % 5)))
+                   for i in range(6)]
+        pool.drain(handles)
+        assert pool.stats()["max_inflight"] == 3  # pinned bound never moves
+
+
 # -------------------------------------------------- oracle failure paths
 
 def _oracle(space, pool, records=None, **kw):

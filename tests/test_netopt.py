@@ -1,0 +1,205 @@
+"""``repro.compiler.netopt`` — network-scope HW/SW co-optimization.
+
+Covers the pinning primitive (``DesignSpace.pin`` + the pinned MAPPO
+action heads), the hardware candidate space, the co-optimization loop
+(shared chip invariant, multiplicity-weighted latency, equal-budget win
+over the network hw-frozen baseline, per-(hw, layer) warm resume), the
+network baselines, and the ``SessionReport.network_latency`` satellite.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compiler.netopt import (HW_KNOBS, HwCandidateSpace, hw_tag,
+                                   NetOptConfig, NetworkCoOptimizer,
+                                   NetworkReport, network_hw_frozen_tune,
+                                   network_random_hw_tune)
+from repro.compiler.session import Session, SessionReport
+from repro.compiler.task import TuningTask
+from repro.core import agents as A
+from repro.core import mappo
+from repro.core.design_space import DesignSpace
+from repro.core.tuner import ArcoLoop, TunerConfig
+
+WL_BIG = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
+WL_MID = dict(b=1, h=28, w=28, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+TINY = TunerConfig(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                   mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                   gbt_rounds=10)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return [TuningTask.from_space("c1", DesignSpace.for_conv2d(WL_BIG),
+                                  multiplicity=2),
+            TuningTask.from_space("c2", DesignSpace.for_conv2d(WL_MID),
+                                  multiplicity=1)]
+
+
+def _tiny_netcfg(**kw):
+    base = dict(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                layer_budget=8, refine_budget=8, tuner=TINY)
+    base.update(kw)
+    return NetOptConfig(**base)
+
+
+# ------------------------------------------------------------------ pin()
+
+def test_pin_shrinks_space_and_clamps():
+    space = DesignSpace.for_conv2d(WL_BIG)
+    p = space.pin(HW_KNOBS, (1, 64, 128))
+    assert p.size * np.prod([len(space.choices[k]) for k in HW_KNOBS]) \
+        == space.size
+    assert p.choices[1] == (64,) and p.choices[2] == (128,)
+    assert p.pinned == (True, True, True, False, False, False, False)
+    # a value beyond the layer's table clamps to the nearest choice (the
+    # layer underutilizes the shared dimension)
+    assert space.pin((1,), (4096,)).choices[1] == (256,)
+    # pinning composes and survives dataclass identity checks
+    pp = p.pin((5,), (space.choices[5][0],))
+    assert pp.pinned[5] and pp.pinned[0]
+    # values/measure still work on the pinned space
+    lat = p.measure(jnp.zeros((1, p.n_knobs), jnp.int32))
+    assert np.isfinite(float(lat[0]))
+
+
+def test_pin_measures_identically_to_full_space():
+    """A pinned config and the corresponding full-space config decode to
+    the same knob values, hence the same oracle latency."""
+    space = DesignSpace.for_conv2d(WL_BIG)
+    values = (1, 64, 128)
+    p = space.pin(HW_KNOBS, values)
+    full_idx = np.zeros(space.n_knobs, np.int64)
+    for k, v in zip(HW_KNOBS, values):
+        full_idx[k] = space.choices[k].index(v)
+    pin_idx = np.zeros(space.n_knobs, np.int64)  # pinned knobs: index 0
+    lat_full = float(space.measure(jnp.asarray([full_idx], jnp.int32))[0])
+    lat_pin = float(p.measure(jnp.asarray([pin_idx], jnp.int32))[0])
+    assert lat_full == lat_pin
+
+
+def test_pinned_action_heads_masked():
+    space = DesignSpace.for_conv2d(WL_BIG).pin(HW_KNOBS, (1, 64, 128))
+    env = mappo.env_params_from_space(space)
+    hw_mask = np.asarray(A.action_mask("hardware", env.pinned))
+    assert hw_mask.sum() == 1          # all-pinned agent keeps the no-op
+    assert hw_mask[13]                 # deltas (0,0,0) for the 3-knob head
+    assert np.asarray(A.action_mask("mapping", env.pinned)).all()
+    # unpinned spaces mask nothing (mask is all-True => logits unchanged)
+    env0 = mappo.env_params_from_space(DesignSpace.for_conv2d(WL_BIG))
+    for agent in ("hardware", "scheduling", "mapping"):
+        assert np.asarray(A.action_mask(agent, env0.pinned)).all()
+
+
+def test_arco_on_pinned_space_never_moves_pinned_knobs():
+    space = DesignSpace.for_conv2d(WL_BIG).pin(HW_KNOBS, (1, 64, 128))
+    loop = ArcoLoop(space, TINY, task="pinned")
+    loop.seed(budget=8)
+    loop.step(budget=16)
+    seen = np.asarray([list(c) for c in loop.track.seen])
+    assert (seen[:, list(HW_KNOBS)] == 0).all()
+
+
+# ------------------------------------------------------ hw candidate space
+
+def test_hw_candidate_space_from_tasks(tasks):
+    hw = HwCandidateSpace.from_tasks(tasks)
+    assert hw.n_knobs == 3
+    # unions cover both layers' tables
+    assert max(hw.choices[1]) == 256 and max(hw.choices[2]) == 256
+    assert hw.size == np.prod([len(c) for c in hw.choices])
+    # values <-> index round-trip and feature shape
+    v = hw.values(hw.index_config((1, 64, 128)))
+    assert v == (1, 64, 128)
+    assert hw.features(v).shape == (14,)
+    assert len(hw.all_index_configs()) == hw.size
+    # default chip is in the global lists; seeds start with it
+    default = hw.default_values(tasks)
+    seeds = hw.seed_values(3, tasks, np.random.default_rng(0))
+    assert seeds[0] == default
+    assert len(seeds) == len(set(seeds)) == 3
+    assert hw_tag(v) == "hw[b1,ci64,co128]"
+
+
+# --------------------------------------------------------------- the loop
+
+def test_coopt_shared_chip_and_equal_budget_win(tasks, tmp_path):
+    cfg = _tiny_netcfg()
+    rep = NetworkCoOptimizer(tasks, cfg,
+                             records=str(tmp_path / "coopt.jsonl"),
+                             name="toy").run()
+    frozen = network_hw_frozen_tune(tasks, cfg,
+                                    records=str(tmp_path / "frozen.jsonl"),
+                                    name="toy")
+    # ONE shared hardware config, identical across all layer mappings
+    assert rep.verify_shared_hardware()
+    for layer in rep.layers.values():
+        assert layer["hardware"] == rep.hw_config
+        assert set(layer["mapping"]).isdisjoint(rep.hw_config)
+        # small layers underutilize the shared dimension, never exceed it
+        assert all(layer["hw_utilized"][k] <= rep.hw_config[k]
+                   for k in layer["hw_utilized"])
+    # multiplicity-weighted end-to-end latency
+    assert rep.network_latency == pytest.approx(sum(
+        l["latency"] * l["multiplicity"] for l in rep.layers.values()))
+    assert rep.n_layers == 3
+    # the headline: co-optimized <= network hw-frozen at equal budget;
+    # the baseline gets coopt's upper bound, so the comparison is
+    # conservative — coopt's real spend must come in at or under it
+    assert frozen.trace[0]["layer_budget"] == cfg.total_layer_budget()
+    assert rep.total_measurements <= cfg.total_layer_budget() * len(tasks)
+    assert rep.network_latency <= frozen.network_latency
+    # trace/pareto bookkeeping
+    assert rep.hw_candidates >= cfg.seed_candidates
+    assert [r["phase"] for r in rep.trace][0] == "seed"
+    assert rep.trace[-1]["phase"] == "refine"
+    assert rep.pareto()[-1][1] == rep.network_latency
+    assert rep.total_measurements == rep.trace[-1]["cum_measurements"]
+    # JSON round-trip
+    back = NetworkReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back.network_latency == rep.network_latency
+    assert back.hw_config == rep.hw_config
+    assert back.pareto() == rep.pareto()
+
+
+def test_coopt_warm_resume_replays_from_records(tasks, tmp_path):
+    cfg = _tiny_netcfg()
+    path = str(tmp_path / "resume.jsonl")
+    r1 = NetworkCoOptimizer(tasks, cfg, records=path, name="toy").run()
+    assert r1.total_measurements > 0
+    r2 = NetworkCoOptimizer(tasks, cfg, records=path, name="toy").run()
+    assert r2.total_measurements == 0  # every (hw, layer) row replayed
+    assert r2.hw_config == r1.hw_config
+    assert r2.network_latency == r1.network_latency
+
+
+def test_network_random_hw_baseline(tasks):
+    cfg = _tiny_netcfg(refine_budget=0)
+    rep = network_random_hw_tune(tasks, cfg, n_candidates=2, name="toy")
+    assert rep.algo == "random_hw"
+    assert rep.hw_candidates == 2
+    assert all(r["phase"] == "random" for r in rep.trace)
+    assert rep.verify_shared_hardware()
+    # equal total budget split across candidates
+    assert rep.trace[0]["layer_budget"] == cfg.total_layer_budget() // 2
+
+
+# ----------------------------------------- SessionReport.network_latency
+
+def test_session_network_latency_weights_multiplicity(tasks):
+    sr = Session(tasks, tuner=TINY, budget=8).run()
+    assert sr["c1"].multiplicity == 2 and sr["c2"].multiplicity == 1
+    expect = 2 * sr["c1"].best_latency + sr["c2"].best_latency
+    assert sr.network_latency() == pytest.approx(expect)
+    # multiplicity survives the JSON round-trip
+    back = SessionReport.from_dict(json.loads(json.dumps(sr.to_dict())))
+    assert back.network_latency() == pytest.approx(expect)
+    # old dicts without the field default to 1 (backward compat)
+    d = sr.to_dict()
+    for rep in d["reports"].values():
+        rep.pop("multiplicity")
+    legacy = SessionReport.from_dict(d)
+    assert legacy.network_latency() == pytest.approx(
+        sr["c1"].best_latency + sr["c2"].best_latency)

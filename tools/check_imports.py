@@ -30,6 +30,10 @@ REQUIRED = (
     "repro.compiler.executor.base",
     "repro.compiler.executor.pool",
     "repro.compiler.executor.stub",
+    "repro.compiler.netopt",
+    "repro.compiler.netopt.hwspace",
+    "repro.compiler.netopt.loop",
+    "repro.compiler.netopt.report",
     "repro.compiler.oracle",
     "repro.compiler.records",
     "repro.compiler.report",
