@@ -1,0 +1,96 @@
+"""Search-quality sweep for the quarantined long-run assertion.
+
+``tests/test_tuner.py::test_arco_beats_hw_frozen_baselines_long_run``
+(stochastic marker) asks ARCO to beat the hw-frozen AutoTVM/random
+baselines on one conv task at a 288-measurement budget and has failed
+since seed.  This sweep runs the ROADMAP's open investigation: MAPPO
+entropy coefficient x Confidence-Sampling batch schedule
+(``TunerConfig.b_growth``) on that exact task, several seeds each,
+against the baselines at the same budget.
+
+    PYTHONPATH=src python benchmarks/search_quality_sweep.py \
+        [--seeds 5] [--out artifacts/sweep_quality.json]
+
+Findings go to ROADMAP; the deterministic short-horizon convergence test
+in tier-1 pins the chosen configuration at a fixed seed.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import mappo
+from repro.core.baselines import autotvm_tune, random_tune
+from repro.core.design_space import DesignSpace
+from repro.core.tuner import TunerConfig, arco_tune
+
+# the stochastic test's task and budget, verbatim
+WL = dict(b=1, h=14, w=14, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+
+
+def long_run_cfg(seed: int = 0, ent_coef: float = 0.01,
+                 b_growth: float = 1.0,
+                 n_steps: int = 64) -> TunerConfig:
+    return TunerConfig(
+        iteration_opt=6, b_measure=48, episodes_per_iter=3,
+        mappo=mappo.MappoConfig(n_steps=n_steps, n_envs=16,
+                                ent_coef=ent_coef),
+        gbt_rounds=20, seed=seed, b_growth=b_growth)
+
+
+VARIANTS = {
+    "base": {},
+    "ent0.003": {"ent_coef": 0.003},
+    "ent0.03": {"ent_coef": 0.03},
+    "ent0.1": {"ent_coef": 0.1},
+    "growth0.6": {"b_growth": 0.6},
+    "growth1.5": {"b_growth": 1.5},
+    "ent0.03+growth0.6": {"ent_coef": 0.03, "b_growth": 0.6},
+    "steps128": {"n_steps": 128},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    space = DesignSpace.for_conv2d(WL)
+    budget = 6 * 48
+
+    results = {}
+    base = {"autotvm": [], "random": []}
+    for seed in range(args.seeds):
+        cfg = long_run_cfg(seed=seed)
+        base["autotvm"].append(autotvm_tune(space, cfg).best_latency)
+        base["random"].append(random_tune(space, cfg).best_latency)
+    for fw, lats in base.items():
+        print(f"{fw:20s} " + " ".join(f"{1e6 * x:8.2f}" for x in lats)
+              + f"   med {1e6 * float(np.median(lats)):8.2f} us", flush=True)
+    results["baselines"] = base
+
+    for name, kw in VARIANTS.items():
+        lats, wins = [], 0
+        for seed in range(args.seeds):
+            r = arco_tune(space, long_run_cfg(seed=seed, **kw))
+            assert r.n_measurements <= budget
+            lats.append(r.best_latency)
+            wins += (r.best_latency < base["autotvm"][seed]
+                     and r.best_latency < base["random"][seed])
+        print(f"arco/{name:15s} " + " ".join(f"{1e6 * x:8.2f}" for x in lats)
+              + f"   med {1e6 * float(np.median(lats)):8.2f} us  "
+              f"beats-both {wins}/{args.seeds}", flush=True)
+        results[name] = {"latencies": lats, "wins": wins,
+                         "cfg": {k: v for k, v in kw.items()}}
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
+import numbers
 import os
+import subprocess
 import time
 from typing import Dict, Optional
 
@@ -126,19 +129,73 @@ def network_results(sweep: Dict) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def git_revision() -> str:
+    """Short git revision of the working tree (``-dirty`` suffixed when
+    uncommitted changes exist); ``"unknown"`` outside a repo."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=root, capture_output=True, text=True,
+                             timeout=10)
+        if rev.returncode != 0:
+            return "unknown"
+        dirty = subprocess.run(["git", "status", "--porcelain"], cwd=root,
+                               capture_output=True, text=True, timeout=10)
+        suffix = "-dirty" if dirty.stdout.strip() else ""
+        return rev.stdout.strip() + suffix
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def validate_bench_doc(doc: Dict) -> Dict:
+    """Assert ``doc`` is a well-formed ``repro-bench/1`` artifact; returns
+    it.  The contract trajectory tooling diffs across commits: flat
+    finite-float metrics (structure goes in metric *names*), a JSON-object
+    config, a git revision, a creation timestamp."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"bench doc must be a dict, got {type(doc)}")
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"bench schema {doc.get('schema')!r} != "
+                         f"{BENCH_SCHEMA!r}")
+    if not doc.get("bench") or not isinstance(doc["bench"], str):
+        raise ValueError("bench doc needs a nonempty str 'bench' name")
+    if not isinstance(doc.get("created_unix"), numbers.Real):
+        raise ValueError("bench doc needs a numeric 'created_unix'")
+    if not doc.get("git_rev") or not isinstance(doc["git_rev"], str):
+        raise ValueError("bench doc needs a nonempty str 'git_rev'")
+    if not isinstance(doc.get("config"), dict):
+        raise ValueError("bench doc needs a dict 'config'")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        raise ValueError("bench doc needs a nonempty 'metrics' dict")
+    for k, v in metrics.items():
+        if not isinstance(k, str):
+            raise ValueError(f"metric name {k!r} is not a str")
+        if isinstance(v, bool) or not isinstance(v, numbers.Real) \
+                or not math.isfinite(float(v)):
+            raise ValueError(f"metric {k!r} must be a finite float, "
+                             f"got {v!r}")
+    return doc
+
+
 def write_bench_artifact(path: str, bench: str, metrics: Dict[str, float],
                          config: Dict) -> Dict:
     """The standardized ``BENCH_*.json`` artifact: one flat document of
 
         {"schema": "repro-bench/1", "bench": <name>, "created_unix": <ts>,
-         "config": {...what was run...}, "metrics": {name: float, ...}}
+         "git_rev": <short rev[-dirty]>, "config": {...what was run...},
+         "metrics": {name: float, ...}}
 
     ``metrics`` is a flat name->float dict so trajectory tooling can diff
     runs across commits without schema knowledge; put structure in names
-    (``coopt_network_latency_s``), not nesting."""
+    (``coopt_network_latency_s``), not nesting.  The document is validated
+    (:func:`validate_bench_doc`) before anything touches disk — a NaN
+    metric or nested dict fails the run, not the downstream diff."""
     doc = {"schema": BENCH_SCHEMA, "bench": bench,
-           "created_unix": time.time(), "config": config,
+           "created_unix": time.time(), "git_rev": git_revision(),
+           "config": config,
            "metrics": {k: float(v) for k, v in metrics.items()}}
+    validate_bench_doc(doc)
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)

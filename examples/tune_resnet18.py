@@ -61,9 +61,13 @@ def coopt_comparison(args, cfg, tasks):
           "measurements/layer (co-opt upper bound; its refinement replays "
           "cached rows) for every method\n")
 
+    from repro.compiler.surrogate_store import store_from_args
     coopt = NetworkCoOptimizer(
         tasks, ncfg, records=args.records and f"{args.records}.netopt.jsonl",
-        workers=args.workers, timeout_s=args.timeout_s, name="resnet-18").run()
+        workers=args.workers, timeout_s=args.timeout_s, name="resnet-18",
+        surrogates=store_from_args(args)).run()
+    if coopt.surrogates:
+        print(f"surrogate transfer: {coopt.surrogates}")
     frozen = network_hw_frozen_tune(
         tasks, ncfg, records=args.records and f"{args.records}.frozen.jsonl",
         workers=args.workers, timeout_s=args.timeout_s, name="resnet-18")
@@ -114,6 +118,8 @@ def main():
                     help="JSONL records prefix; one file per method so "
                          "no method warm-starts from another's cache")
     from repro.compiler.executor import add_worker_args, validate_worker_args
+    from repro.compiler.surrogate_store import add_surrogate_args
+    add_surrogate_args(ap)   # GBT warm start for --coopt (cross-network)
     add_worker_args(ap)
     args = ap.parse_args()
     validate_worker_args(ap, args)
@@ -130,6 +136,9 @@ def main():
     if args.coopt:
         coopt_comparison(args, cfg, tasks)
     else:
+        if args.warm_from or args.save_surrogates:
+            raise SystemExit("--warm-from/--save-surrogates apply to the "
+                             "co-optimizer; add --coopt")
         software_only_comparison(args, cfg, tasks)
 
 

@@ -30,6 +30,12 @@ _EXPORTS = {
     "TuningTask": "repro.compiler.task",
     "Session": "repro.compiler.session",
     "SessionReport": "repro.compiler.session",
+    "SurrogateStore": "repro.compiler.surrogate_store",
+    "SurrogateSchemaError": "repro.compiler.surrogate_store",
+    "RecordingGBT": "repro.compiler.surrogate_store",
+    "NetworkTask": "repro.compiler.zoo",
+    "get_network": "repro.compiler.zoo",
+    "network_names": "repro.compiler.zoo",
 }
 __all__ = sorted(_EXPORTS)
 

@@ -25,6 +25,14 @@ invocations keep working):
         --model resnet-18 --layer-budget 16 --records artifacts/r18.jsonl
     PYTHONPATH=src python -m repro.compiler.cli netopt \
         --model resnet-18 --baseline hw-frozen
+
+    # cross-network surrogate transfer over the workload zoo: tune one
+    # network saving its GBT training rows, then warm-start another
+    # network's search from them (repro.compiler.surrogate_store)
+    PYTHONPATH=src python -m repro.compiler.cli netopt \
+        --network vgg-11 --save-surrogates artifacts/surr.jsonl
+    PYTHONPATH=src python -m repro.compiler.cli netopt \
+        --network resnet-18 --warm-from artifacts/surr.jsonl
 """
 from __future__ import annotations
 
@@ -35,33 +43,49 @@ from typing import List
 
 from repro.compiler.executor import add_worker_args, validate_worker_args
 from repro.compiler.session import ALGOS, Session
+from repro.compiler.surrogate_store import add_surrogate_args, store_from_args
 from repro.compiler.task import TuningTask
+from repro.compiler.zoo import get_network, network_names
+
 from repro.core.tuner import TunerConfig
 
 SUBCOMMANDS = ("tune", "netopt")
 
 
-def _conv_or_matmul_tasks(args) -> List[TuningTask]:
-    """Tasks from the flags shared by both subcommands."""
-    if args.model:
+def _network_label(args) -> str:
+    """The ONE network label for this invocation's task set, shared by
+    tune and netopt: surrogate-store rows are keyed (and own-network
+    excluded) by it, so the two subcommands must always derive it the
+    same way for the same workload."""
+    return args.network or args.model or ",".join(args.matmul)
+
+
+def _network_tasks(args) -> List[TuningTask]:
+    """Tasks from the network-defining flags shared by both subcommands."""
+    if args.network:
+        tasks = list(get_network(args.network).tasks)
+    elif args.model:
         tasks = TuningTask.conv_tasks(args.model)
-        return tasks[:args.max_tasks] if args.max_tasks else tasks
-    tasks = []
-    for spec in args.matmul:
-        m, n, k = (int(x) for x in spec.lower().split("x"))
-        tasks.append(TuningTask.matmul(m, n, k))
-    return tasks
+    else:
+        tasks = []
+        for spec in args.matmul:
+            m, n, k = (int(x) for x in spec.lower().split("x"))
+            tasks.append(TuningTask.matmul(m, n, k))
+        return tasks
+    return tasks[:args.max_tasks] if args.max_tasks else tasks
 
 
 def _tasks_from_args(args) -> List[TuningTask]:
-    picked = [bool(args.model), bool(args.matmul), bool(args.arch)]
+    picked = [bool(args.model), bool(args.matmul), bool(args.arch),
+              bool(args.network)]
     if sum(picked) != 1:
-        raise SystemExit("pick exactly one of --model / --matmul / --arch")
+        raise SystemExit("pick exactly one of --model / --matmul / "
+                         "--network / --arch")
     if args.oracle == "compile" and not args.arch:
         raise SystemExit("--oracle compile requires --arch/--shape "
                          "(conv/GEMM tasks are measured analytically)")
-    if args.model or args.matmul:
-        return _conv_or_matmul_tasks(args)
+    if not args.arch:
+        return _network_tasks(args)
     if args.oracle != "compile":
         raise SystemExit("--arch/--shape needs --oracle compile")
     return [TuningTask.cell(args.arch, s) for s in args.shape]
@@ -70,8 +94,10 @@ def _tasks_from_args(args) -> List[TuningTask]:
 def _add_task_args(ap) -> None:
     ap.add_argument("--model", help="CNN model: tune its conv tasks "
                                     "(e.g. resnet-18)")
+    ap.add_argument("--network", choices=network_names(), default=None,
+                    help="workload-zoo network (repro.compiler.zoo)")
     ap.add_argument("--max-tasks", type=int, default=0,
-                    help="cap the number of conv tasks (0 = all)")
+                    help="cap the number of network tasks (0 = all)")
     ap.add_argument("--matmul", action="append", default=[],
                     metavar="MxNxK", help="GEMM task (repeatable)")
 
@@ -91,11 +117,18 @@ def _run_tune(args) -> int:
     if args.arch and not args.shape:
         args.shape = ["train_4k"]
     tasks = _tasks_from_args(args)
+    if args.independent and (args.warm_from or args.save_surrogates):
+        # reject before store_from_args touches the filesystem
+        raise SystemExit("--warm-from/--save-surrogates need the shared "
+                         "cost model (drop --independent)")
+    store = store_from_args(args)
+    label = _network_label(args) or None
     session = Session(tasks, tuner=TunerConfig.fast(), algo=args.algo,
                       budget=args.budget, use_cs=not args.no_cs,
                       share_cost_model=not args.independent,
                       records=args.records, seed=args.seed,
-                      workers=args.workers, timeout_s=args.timeout_s)
+                      workers=args.workers, timeout_s=args.timeout_s,
+                      surrogates=store, network=label)
     _emit(session.run().to_dict(), args)
     return 0
 
@@ -104,18 +137,20 @@ def _run_netopt(args) -> int:
     from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
                                        network_hw_frozen_tune,
                                        network_random_hw_tune)
-    if bool(args.model) == bool(args.matmul):
-        raise SystemExit("netopt needs exactly one of --model / --matmul")
-    tasks = _conv_or_matmul_tasks(args)
+    if sum(bool(x) for x in (args.model, args.matmul, args.network)) != 1:
+        raise SystemExit("netopt needs exactly one of --model / --matmul "
+                         "/ --network")
+    tasks = _network_tasks(args)
     cfg = NetOptConfig(seed_candidates=args.seed_candidates,
                        hw_rounds=args.hw_rounds,
                        hw_per_round=args.hw_per_round,
                        layer_budget=args.layer_budget,
                        refine_budget=args.refine_budget,
                        tuner=TunerConfig.fast(), seed=args.seed)
-    name = args.model or ",".join(args.matmul)
+    name = _network_label(args)
     kw = dict(records=args.records, workers=args.workers,
-              timeout_s=args.timeout_s, name=name)
+              timeout_s=args.timeout_s, name=name,
+              surrogates=store_from_args(args))
     if args.baseline == "hw-frozen":
         rep = network_hw_frozen_tune(tasks, cfg, **kw)
     elif args.baseline == "random-hw":
@@ -156,6 +191,7 @@ def main(argv=None) -> int:
                       help="per-task GBT instead of the shared cost model")
     tune.add_argument("--records", default=None,
                       help="JSONL measurement records (persist + warm resume)")
+    add_surrogate_args(tune)
     add_worker_args(tune)
     tune.add_argument("--out", default=None, help="write session JSON here")
     tune.set_defaults(run=_run_tune)
@@ -181,6 +217,7 @@ def main(argv=None) -> int:
     net.add_argument("--seed", type=int, default=0)
     net.add_argument("--records", default=None,
                      help="JSONL records: per-(hw, layer) warm resume")
+    add_surrogate_args(net)
     add_worker_args(net)
     net.add_argument("--out", default=None, help="write NetworkReport JSON")
     net.set_defaults(run=_run_netopt)

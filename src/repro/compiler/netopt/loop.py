@@ -18,6 +18,13 @@ This is the DiGamma-style joint HW-config x per-layer-mapping search on
 top of the pieces PRs 2-3 built; contrast with ``examples/
 tune_resnet18.py``'s historical sum of per-layer optima, which gives
 every conv layer its own fictional chip.
+
+``surrogates=`` (a :class:`~repro.compiler.surrogate_store.
+SurrogateStore` or path) makes the run part of an *accumulating* system:
+both GBTs warm-start from other networks' stored training rows (the
+outer search then seeds from surrogate-ranked candidates) and save their
+own rows for future runs — cross-network transfer, orthogonal to the
+same-network record replay above.
 """
 from __future__ import annotations
 
@@ -34,9 +41,11 @@ from repro.compiler.netopt.hwspace import (HW_KNOBS, HW_KNOB_NAMES,
                                            HwCandidateSpace, N_HW_FEAT,
                                            hw_dict, hw_tag)
 from repro.compiler.netopt.report import NetworkReport
-from repro.compiler.oracle import decode_config
+from repro.compiler.oracle import Oracle, decode_config
 from repro.compiler.records import RecordLog
 from repro.compiler.session import Session
+from repro.compiler.surrogate_store import (SurrogateStore, attach_sw_gbt,
+                                            coerce_store, space_family)
 from repro.compiler.task import TuningTask
 from repro.core import confidence_sampling as CS
 from repro.core.cost_model import GBTModel
@@ -87,7 +96,8 @@ class _Evaluator:
 
     def __init__(self, tasks: Iterable[TuningTask], cfg: NetOptConfig,
                  records: Union[None, str, RecordLog], workers: int,
-                 timeout_s: Optional[float], name: str, algo: str):
+                 timeout_s: Optional[float], name: str, algo: str,
+                 surrogates: Union[None, str, SurrogateStore] = None):
         self.tasks = list(tasks)
         if not self.tasks:
             raise ValueError("network co-optimization needs >= 1 task")
@@ -112,8 +122,21 @@ class _Evaluator:
         self.hw = HwCandidateSpace.from_tasks(self.tasks)
         # ONE software surrogate across layers and hardware candidates:
         # config features carry the hw knob values, so measurements under
-        # candidate A warm-start the mapping search under candidate B
-        self.sw_gbt = GBTModel(n_rounds=cfg.tuner.gbt_rounds, seed=cfg.seed)
+        # candidate A warm-start the mapping search under candidate B.
+        # With a surrogate store it also records its training rows (and
+        # primes from *other* networks' rows — cross-network transfer;
+        # own-network rows are excluded so a warm-from-self run stays
+        # bit-identical to the cold run and replays from records).
+        self.store = coerce_store(surrogates)
+        # rows are only compatible within one space family (core conv/gemm
+        # vs pod shard cells reuse the same dims for different semantics)
+        self.family = space_family(self.tasks[0].space)
+        self.sw_gbt, self.surrogate_stats = attach_sw_gbt(
+            self.store, n_rounds=cfg.tuner.gbt_rounds, seed=cfg.seed,
+            network=name, family=self.family)
+        if self.surrogate_stats:
+            self.surrogate_stats.update(warm_hw_rows=0, hw_rows_saved=0,
+                                        warm_seeded=False)
         self.executor = None
         self.trace: List[Dict[str, object]] = []
         # values tuple -> {"network_latency": float, "session": SessionReport}
@@ -154,6 +177,18 @@ class _Evaluator:
         net_lat = sr.network_latency()
         new = sum(r.oracle_stats.get("misses", 0) for r in sr)
         self.cum_measurements += new
+        # a layer whose best is the executor failure-penalty sentinel
+        # means transient worker noise contaminated net_lat — keep it out
+        # of the persistent store (mirror of RecordingGBT's sw-row
+        # filter; deterministic analytical infeasibility, a different
+        # sentinel, still transfers)
+        tainted = any(r.best_latency == Oracle.penalty_latency for r in sr)
+        if self.store is not None and not tainted and self.store.add(
+                "hw", self.hw.features(values),
+                -np.log(max(float(net_lat), 1e-12)), network=self.name,
+                family=self.family):
+            self.surrogate_stats["hw_rows_saved"] = \
+                int(self.surrogate_stats.get("hw_rows_saved", 0)) + 1
         prev = self.evaluated.get(values)
         if prev is None or net_lat <= float(prev["network_latency"]):
             self.evaluated[values] = {"network_latency": net_lat,
@@ -201,7 +236,8 @@ class _Evaluator:
             network_latency=float(entry["network_latency"]),
             n_layers=n_layers, hw_candidates=len(self.evaluated),
             total_measurements=self.cum_measurements,
-            wall_time_s=time.perf_counter() - self.t0, trace=self.trace)
+            wall_time_s=time.perf_counter() - self.t0, trace=self.trace,
+            surrogates=dict(self.surrogate_stats))
 
 
 class NetworkCoOptimizer:
@@ -215,12 +251,23 @@ class NetworkCoOptimizer:
                  cfg: Optional[NetOptConfig] = None,
                  records: Union[None, str, RecordLog] = None,
                  workers: int = 0, timeout_s: Optional[float] = None,
-                 name: str = "network"):
+                 name: str = "network",
+                 surrogates: Union[None, str, SurrogateStore] = None):
         self.cfg = cfg or NetOptConfig()
         self._ev = _Evaluator(tasks, self.cfg, records, workers, timeout_s,
-                              name, "netopt")
+                              name, "netopt", surrogates=surrogates)
         self.hw_gbt = GBTModel(n_rounds=self.cfg.hw_gbt_rounds,
                                n_features=N_HW_FEAT, seed=self.cfg.seed)
+        # Cross-network transfer of the hardware surrogate: prime from
+        # other networks' stored (hw features, fitness) rows — the
+        # aggregate-descriptor half of the features is what lets one GBT
+        # rank candidates for a network it has never measured.
+        self.warm_hw_rows = (self._ev.store.warm_start(
+            self.hw_gbt, "hw", exclude_network=name,
+            family=self._ev.family)
+            if self._ev.store is not None else 0)
+        if self._ev.surrogate_stats:
+            self._ev.surrogate_stats["warm_hw_rows"] = int(self.warm_hw_rows)
 
     @property
     def hw(self) -> HwCandidateSpace:
@@ -231,7 +278,26 @@ class NetworkCoOptimizer:
         rng = np.random.default_rng(cfg.seed)
         try:
             ev.open()
-            cands = ev.hw.seed_values(cfg.seed_candidates, ev.tasks, rng)
+            if self.warm_hw_rows > 0:
+                # transferred hardware surrogate: spend the seed round on
+                # its ranked proposals instead of uniform draws.  The two
+                # guaranteed seeds stay — the network-default chip (the
+                # candidate set must dominate the frozen baseline's) and
+                # the largest geometry (VMEM frontier probe; a weakly
+                # trained transfer surrogate must not cost that insurance).
+                cands = ev.hw.seed_values(min(cfg.seed_candidates, 2),
+                                          ev.tasks, rng)
+                if cfg.seed_candidates > len(cands):
+                    props = self._propose(cfg.seed_candidates - len(cands),
+                                          cfg.seed, exclude=cands)
+                    cands += props
+                    # only claim warm seeding when ranked proposals
+                    # actually made it into the seed set (with <= 2 seed
+                    # slots the guaranteed candidates fill it; a
+                    # degenerate space can leave nothing to propose)
+                    ev.surrogate_stats["warm_seeded"] = bool(props)
+            else:
+                cands = ev.hw.seed_values(cfg.seed_candidates, ev.tasks, rng)
             for rnd in range(cfg.hw_rounds + 1):
                 fresh: List[Tuple[Tuple[int, ...], float]] = []
                 for values in cands:
@@ -257,20 +323,23 @@ class NetworkCoOptimizer:
         finally:
             ev.close()
 
-    def _propose(self, n: int, seed: int) -> List[Tuple[int, ...]]:
+    def _propose(self, n: int, seed: int,
+                 exclude: Sequence[Tuple[int, ...]] = ()
+                 ) -> List[Tuple[int, ...]]:
         """Confidence Sampling over the full hardware enumeration, scored
-        by the network-scope GBT; already-evaluated candidates are skipped
-        and the batch is topped up by predicted score."""
+        by the network-scope GBT; already-evaluated (and ``exclude``d)
+        candidates are skipped and the batch is topped up by predicted
+        score."""
         ev = self._ev
         all_idx = ev.hw.all_index_configs()
         feats = np.stack([ev.hw.features(ev.hw.values(ix))
                           for ix in all_idx])
         scores = np.asarray(self.hw_gbt.predict(feats), np.float64)
         picked = CS.confidence_sampling(all_idx, scores,
-                                        n + len(ev.evaluated),
+                                        n + len(ev.evaluated) + len(exclude),
                                         ev.hw.n_choices, seed=seed)
         out: List[Tuple[int, ...]] = []
-        seen = set(ev.evaluated)
+        seen = set(ev.evaluated) | {tuple(v) for v in exclude}
         for ix in picked:
             v = ev.hw.values(ix)
             if v not in seen:
@@ -300,13 +369,16 @@ def network_hw_frozen_tune(tasks: Iterable[TuningTask],
                            records: Union[None, str, RecordLog] = None,
                            workers: int = 0,
                            timeout_s: Optional[float] = None,
-                           name: str = "network") -> NetworkReport:
+                           name: str = "network",
+                           surrogates: Union[None, str,
+                                             SurrogateStore] = None
+                           ) -> NetworkReport:
     """Network-scope hw-frozen baseline: the single network-default chip,
     with the co-optimizer's *entire* per-layer budget spent on software
     mapping under it (equal-measurement-budget comparison)."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "hw_frozen")
+                    "hw_frozen", surrogates=surrogates)
     try:
         ev.open()
         ev.evaluate(ev.hw.default_values(ev.tasks),
@@ -322,12 +394,15 @@ def network_random_hw_tune(tasks: Iterable[TuningTask],
                            records: Union[None, str, RecordLog] = None,
                            workers: int = 0,
                            timeout_s: Optional[float] = None,
-                           name: str = "network") -> NetworkReport:
+                           name: str = "network",
+                           surrogates: Union[None, str,
+                                             SurrogateStore] = None
+                           ) -> NetworkReport:
     """Network-scope random-hardware baseline: uniform candidates, budget
     split evenly — ablates the GBT + CS outer search."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "random_hw")
+                    "random_hw", surrogates=surrogates)
     rng = np.random.default_rng(cfg.seed)
     n_candidates = max(min(n_candidates, ev.hw.size), 1)
     per_layer = max(cfg.total_layer_budget() // n_candidates, 1)

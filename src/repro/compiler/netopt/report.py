@@ -37,6 +37,11 @@ class NetworkReport:
     #  "cum_measurements": int, "best_so_far": float, "phase": "seed" |
     #  "cs" | "refine" | "frozen" | "random"}
     trace: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+    # cross-network surrogate transfer (repro.compiler.surrogate_store):
+    # {"store": path|None, "warm_hw_rows": int, "warm_sw_rows": int,
+    #  "hw_rows_saved": int, "warm_seeded": bool} — all zero/absent on a
+    # cold run (old documents deserialize with the default)
+    surrogates: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------- queries
     def verify_shared_hardware(self) -> bool:
@@ -44,6 +49,16 @@ class NetworkReport:
         (the co-optimization invariant the per-layer-fantasy sum violates)."""
         return all(layer["hardware"] == self.hw_config
                    for layer in self.layers.values())
+
+    def measurements_to(self, target_latency: float) -> Optional[int]:
+        """Cheapest cumulative measurement count at which the search had
+        already reached ``target_latency`` (None if it never did) — the
+        sample-efficiency readout the transfer benchmark compares cold vs
+        warm-started runs on."""
+        for row in self.trace:
+            if float(row["best_so_far"]) <= target_latency:
+                return int(row["cum_measurements"])
+        return None
 
     def pareto(self) -> List[Tuple[int, float]]:
         """Best-so-far frontier over measurement spend:

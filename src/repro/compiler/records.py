@@ -71,6 +71,15 @@ class RecordLog:
         torn tail left by a killed run is truncated first — otherwise the
         new row would merge into it and turn recoverable trailing
         corruption into a mid-file error on the next resume."""
+        self.append_many([row])
+
+    def append_many(self, rows: List[Dict]) -> None:
+        """Append a batch of rows with ONE ``os.write`` of all the lines —
+        same whole-line atomicity contract as :meth:`append`, without
+        paying an open/write/close round-trip per row (the surrogate
+        store appends every GBT refit batch through this)."""
+        if not rows:
+            return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -79,7 +88,7 @@ class RecordLog:
             # appends are whole-line writes — so one check per instance
             self._truncate_torn_tail()
             self._tail_checked = True
-        data = (json.dumps(row) + "\n").encode()
+        data = "".join(json.dumps(row) + "\n" for row in rows).encode()
         fd = os.open(self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
         try:
             os.write(fd, data)

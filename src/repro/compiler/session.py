@@ -11,6 +11,10 @@ A :class:`Session` runs ARCO or any baseline over *one or many*
 * ``records=<path.jsonl>`` persists every measurement and resumes warm:
   re-running the same session replays from cache, a larger budget
   continues the search without re-paying oracle cost;
+* ``surrogates=<store.jsonl>`` persists the GBT *training rows* instead
+  (:class:`~repro.compiler.surrogate_store.SurrogateStore`): the shared
+  cost model warm-starts from other task sets' rows — cross-network
+  transfer, where records replay only ever covers the same network;
 * ``workers=N`` fans expensive per-settings measurements (the compile
   oracle) across a crash-isolated subprocess pool with ``timeout_s``
   per-measurement timeouts; the interleaved ARCO scheduler then overlaps
@@ -35,6 +39,8 @@ from typing import Dict, Iterable, Optional, Union
 
 from repro.compiler.records import RecordLog
 from repro.compiler.report import TuneReport
+from repro.compiler.surrogate_store import (SurrogateStore, attach_sw_gbt,
+                                            coerce_store, space_family)
 from repro.compiler.task import TuningTask
 from repro.core.cost_model import GBTModel
 from repro.core.tuner import ArcoLoop, TunerConfig
@@ -51,6 +57,10 @@ class SessionReport:
     algo: str
     shared_cost_model: bool
     budget_per_task: int
+    # cross-task surrogate transfer (repro.compiler.surrogate_store):
+    # {"store": path, "warm_sw_rows": int} — empty on sessions run
+    # without a store (old documents deserialize with the default)
+    surrogates: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def single(self) -> TuneReport:
@@ -85,6 +95,7 @@ class SessionReport:
         return {"algo": self.algo, "shared_cost_model": self.shared_cost_model,
                 "budget_per_task": self.budget_per_task,
                 "wall_time_s": self.wall_time_s,
+                "surrogates": dict(self.surrogates),
                 "reports": {n: r.to_dict() for n, r in self.reports.items()}}
 
     @staticmethod
@@ -94,7 +105,8 @@ class SessionReport:
                      for n, r in d["reports"].items()},
             wall_time_s=d["wall_time_s"], algo=d["algo"],
             shared_cost_model=d["shared_cost_model"],
-            budget_per_task=d["budget_per_task"])
+            budget_per_task=d["budget_per_task"],
+            surrogates=d.get("surrogates", {}))
 
 
 class Session:
@@ -108,7 +120,9 @@ class Session:
                  seed: Optional[int] = None,
                  workers: int = 0, timeout_s: Optional[float] = None,
                  gbt: Optional[GBTModel] = None,
-                 executor=None):
+                 executor=None,
+                 surrogates: Union[None, str, SurrogateStore] = None,
+                 network: Optional[str] = None):
         if isinstance(tasks, TuningTask):
             tasks = [tasks]
         self.tasks = list(tasks)
@@ -138,6 +152,29 @@ class Session:
         # tasks AND whoever else holds it (netopt shares one software GBT
         # across every hardware candidate's session)
         self.gbt = gbt
+        # surrogate store: warm-start the shared software GBT from other
+        # networks' rows and record this session's training rows.  The
+        # ``network`` label keys the own-rows exclusion — pass the SAME
+        # name a netopt run of these tasks would use (the CLI passes the
+        # zoo network name) or the cross-surface exclusion cannot match;
+        # the default label is the joined task names.
+        self.surrogates = coerce_store(surrogates)
+        self.surrogate_network = network or \
+            ",".join(t.name for t in self.tasks)[:120]
+        if self.surrogates is not None:
+            if gbt is not None:
+                raise ValueError(
+                    "surrogates= with an external gbt= is ambiguous — the "
+                    "gbt's owner (e.g. netopt) manages the store itself")
+            if not share_cost_model:
+                raise ValueError("surrogates= needs share_cost_model=True "
+                                 "(transfer targets the shared GBT)")
+            families = {space_family(t.space) for t in self.tasks}
+            if len(families) > 1:
+                # rows are stamped with ONE family; a mixed session would
+                # mislabel half of them and poison later warm starts
+                raise ValueError("surrogates= needs tasks of one space "
+                                 f"family, got {sorted(families)}")
         self._oracles = []  # created by run(), closed in its finally
         # ONE worker pool shared by all tasks; an external executor= is the
         # caller's pool (outlives the session — never closed here)
@@ -154,9 +191,19 @@ class Session:
     # ----------------------------------------------------------------- run
     def run(self) -> SessionReport:
         t0 = time.perf_counter()
-        shared_gbt = self.gbt if self.gbt is not None else (
-            GBTModel(n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed)
-            if self.share_cost_model else None)
+        surrogate_stats: Dict[str, object] = {}
+        if self.surrogates is not None:
+            # the network label plays the exclusion role: rows saved here
+            # are excluded when the same network warm-starts later (its
+            # own measurements replay through records instead)
+            shared_gbt, surrogate_stats = attach_sw_gbt(
+                self.surrogates, n_rounds=self.cfg.gbt_rounds,
+                seed=self.cfg.seed, network=self.surrogate_network,
+                family=space_family(self.tasks[0].space))
+        else:
+            shared_gbt = self.gbt if self.gbt is not None else (
+                GBTModel(n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed)
+                if self.share_cost_model else None)
         if self.workers > 0 and self._executor is None:
             # one pool for the whole session — N workers total, not
             # N per task; jobs carry each oracle's own WorkerSpec.
@@ -183,7 +230,8 @@ class Session:
                              wall_time_s=time.perf_counter() - t0,
                              algo=self.algo,
                              shared_cost_model=self.share_cost_model,
-                             budget_per_task=self.budget)
+                             budget_per_task=self.budget,
+                             surrogates=surrogate_stats)
 
     def _run_arco(self, shared_gbt: Optional[GBTModel]
                   ) -> Dict[str, TuneReport]:

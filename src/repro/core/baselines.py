@@ -373,7 +373,8 @@ def chameleon_tune(space: DesignSpace, cfg: TunerConfig = TunerConfig(),
 # close a cycle).
 
 def network_hw_frozen_tune(tasks, cfg=None, records=None, workers: int = 0,
-                           timeout_s=None, name: str = "network"):
+                           timeout_s=None, name: str = "network",
+                           surrogates=None):
     """Network-scope hardware-frozen baseline: ONE shared default
     accelerator geometry for every layer, with the co-optimizer's entire
     per-layer measurement budget spent on software mapping under that
@@ -384,12 +385,13 @@ def network_hw_frozen_tune(tasks, cfg=None, records=None, workers: int = 0,
     from repro.compiler.netopt import loop as _netopt
     return _netopt.network_hw_frozen_tune(tasks, cfg=cfg, records=records,
                                           workers=workers,
-                                          timeout_s=timeout_s, name=name)
+                                          timeout_s=timeout_s, name=name,
+                                          surrogates=surrogates)
 
 
 def network_random_hw_tune(tasks, cfg=None, n_candidates: int = 4,
                            records=None, workers: int = 0, timeout_s=None,
-                           name: str = "network"):
+                           name: str = "network", surrogates=None):
     """Network-scope random-hardware baseline: the same shared-chip
     evaluation loop as netopt but with uniformly drawn hardware candidates
     instead of the GBT + Confidence-Sampling outer search — the ablation
@@ -398,4 +400,5 @@ def network_random_hw_tune(tasks, cfg=None, n_candidates: int = 4,
     return _netopt.network_random_hw_tune(tasks, cfg=cfg,
                                           n_candidates=n_candidates,
                                           records=records, workers=workers,
-                                          timeout_s=timeout_s, name=name)
+                                          timeout_s=timeout_s, name=name,
+                                          surrogates=surrogates)

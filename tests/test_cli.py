@@ -67,6 +67,31 @@ def test_netopt_smoke_and_json_roundtrip(tmp_path, capsys):
     assert rep.trace and rep.pareto()
 
 
+def test_netopt_zoo_network_and_surrogate_flags(tmp_path, capsys):
+    """--network picks a zoo network; --save-surrogates then --warm-from
+    on a different zoo network round-trips the transfer stats."""
+    store = str(tmp_path / "surr.jsonl")
+    rc = main(["netopt", "--network", "bert-gemm", "--max-tasks", "1",
+               "--seed-candidates", "2", "--hw-rounds", "0",
+               "--layer-budget", "2", "--refine-budget", "0",
+               "--save-surrogates", store])
+    assert rc == 0
+    rep = NetworkReport.from_dict(json.loads(capsys.readouterr().out))
+    assert rep.network == "bert-gemm"
+    assert rep.surrogates["hw_rows_saved"] >= 1
+    rc = main(["netopt", "--network", "resnet-18", "--max-tasks", "1",
+               "--seed-candidates", "2", "--hw-rounds", "0",
+               "--layer-budget", "2", "--refine-budget", "0",
+               "--warm-from", store])
+    assert rc == 0
+    rep2 = NetworkReport.from_dict(json.loads(capsys.readouterr().out))
+    assert rep2.surrogates["readonly"]
+    assert rep2.surrogates["warm_sw_rows"] > 0
+    with pytest.raises(SystemExit):  # --network excludes --model
+        main(["netopt", "--network", "resnet-18", "--model", "resnet-18"])
+    capsys.readouterr()
+
+
 def test_netopt_baseline_hw_frozen(capsys):
     rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "1",
                "--seed-candidates", "1", "--hw-rounds", "0",

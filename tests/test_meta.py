@@ -1,0 +1,64 @@
+"""Tier-1 integrity guards over the test suite itself.
+
+``pytest.ini`` excludes ``-m stochastic`` from tier-1, which makes the
+marker a quiet escape hatch: any test wearing it silently leaves CI.
+This guard pins the quarantine to an explicit allowlist — growing it is
+a reviewed decision (edit this file and justify it), never a side
+effect.
+"""
+import os
+import re
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# The full stochastic quarantine.  Adding an entry means permanently
+# removing a test from tier-1 — do it in the same change that documents
+# why (see ROADMAP), not by decoration alone.
+ALLOWED_STOCHASTIC = {
+    ("test_tuner.py", "test_arco_beats_hw_frozen_baselines_long_run"),
+}
+
+_MARK = re.compile(r"^\s*@pytest\.mark\.stochastic\b")
+_DEF = re.compile(r"^\s*(?:def|class)\s+(\w+)")
+# module-level `pytestmark = ...stochastic...` quarantines a whole file
+_MODMARK = re.compile(r"^\s*pytestmark\s*=.*stochastic")
+
+
+def _stochastic_tests():
+    found = set()
+    for fname in sorted(os.listdir(TESTS_DIR)):
+        if not fname.endswith(".py") or fname == os.path.basename(__file__):
+            continue
+        with open(os.path.join(TESTS_DIR, fname)) as f:
+            lines = f.readlines()
+        for i, line in enumerate(lines):
+            if _MODMARK.match(line):
+                found.add((fname, "<module pytestmark>"))
+                continue
+            if not _MARK.match(line):
+                continue
+            for after in lines[i + 1:]:
+                m = _DEF.match(after)
+                if m:  # a decorated class quarantines every test in it
+                    found.add((fname, m.group(1)))
+                    break
+    return found
+
+
+def test_stochastic_marker_set_has_not_grown():
+    found = _stochastic_tests()
+    new = found - ALLOWED_STOCHASTIC
+    assert not new, (
+        f"tests quarantined from tier-1 without review: {sorted(new)} — "
+        "either keep them in tier-1 or extend ALLOWED_STOCHASTIC with a "
+        "ROADMAP justification")
+    gone = ALLOWED_STOCHASTIC - found
+    assert not gone, (f"allowlisted stochastic tests vanished: "
+                      f"{sorted(gone)} — update ALLOWED_STOCHASTIC")
+
+
+def test_pytest_ini_still_excludes_stochastic():
+    with open(os.path.join(os.path.dirname(TESTS_DIR), "pytest.ini")) as f:
+        ini = f.read()
+    assert 'not stochastic' in ini
+    assert "stochastic:" in ini  # marker stays registered

@@ -1,0 +1,118 @@
+"""Property-style tests for ``RecordLog`` torn-tail repair.
+
+A run killed mid-append can leave any byte-prefix of its final line on
+disk.  The durability contract: the *next* run (a fresh ``RecordLog`` on
+the same path) must always warm-resume — every intact row survives, the
+torn fragment disappears, and a new append never merges into it.  These
+tests enumerate every possible kill point byte-for-byte instead of
+sampling a few.
+"""
+import json
+import os
+
+import pytest
+
+from repro.compiler.records import RecordLog
+
+
+def _write_rows(path, rows):
+    log = RecordLog(path)
+    for row in rows:
+        log.append(row)
+    return open(path, "rb").read()
+
+
+def _rows(n):
+    return [{"task": f"t{i % 2}", "config": [i, i + 1],
+             "latency": 1e-4 * (i + 1), "features": [0.5 * i, 1.0]}
+            for i in range(n)]
+
+
+def test_truncation_at_every_byte_of_final_line(tmp_path):
+    """Cut a healthy log at every byte offset inside its final line; warm
+    resume must always succeed, keep exactly the intact prefix rows, and
+    a post-kill append must never merge with the fragment."""
+    rows = _rows(4)
+    ref = _write_rows(str(tmp_path / "ref.jsonl"), rows)
+    lines = ref.splitlines(keepends=True)
+    last_start = len(ref) - len(lines[-1])
+    new_row = {"task": "resume", "config": [9, 9], "latency": 5e-4,
+               "features": [9.0]}
+
+    for cut in range(last_start, len(ref) + 1):
+        path = str(tmp_path / f"cut{cut}.jsonl")
+        with open(path, "wb") as f:
+            f.write(ref[:cut])
+        resumed = RecordLog(path)
+        # load() before any append tolerates the torn tail and always
+        # yields an intact prefix of the original rows (only the row
+        # being written when the kill hit may be missing)
+        before = resumed.load()
+        assert before == rows[:len(before)], f"cut at byte {cut}"
+        assert len(before) >= len(rows) - 1, f"cut at byte {cut}"
+        resumed.append(new_row)
+        # the appended row lands whole behind an intact prefix — never
+        # merged into the fragment.  (A cut that removed only the final
+        # newline leaves a parseable row that load() keeps but the
+        # append-time repair drops: the write was never acknowledged.)
+        after = resumed.load()
+        assert after[-1] == new_row, f"cut at byte {cut}"
+        assert after[:-1] == rows[:len(after) - 1], f"cut at byte {cut}"
+        assert len(after) - 1 >= len(rows) - 1, f"cut at byte {cut}"
+        # every line on disk parses on its own
+        with open(path) as f:
+            for ln in f.read().splitlines():
+                json.loads(ln)
+
+
+def test_truncation_of_a_single_row_file(tmp_path):
+    """Degenerate log: one row, killed mid-first-append.  Every prefix
+    must resume to an empty-then-appended log."""
+    rows = _rows(1)
+    ref = _write_rows(str(tmp_path / "ref.jsonl"), rows)
+    new_row = {"task": "t0", "config": [1], "latency": 1.0, "features": []}
+    for cut in range(0, len(ref) + 1):
+        path = str(tmp_path / f"cut{cut}.jsonl")
+        with open(path, "wb") as f:
+            f.write(ref[:cut])
+        resumed = RecordLog(path)
+        before = resumed.load(task="t0")
+        assert before in ([], rows)
+        resumed.append(new_row)
+        after = resumed.load(task="t0")
+        assert after[-1] == new_row
+        assert after[:-1] in ([], rows)
+
+
+def test_midfile_corruption_still_raises(tmp_path):
+    """Only the *trailing* line is recoverable; corruption anywhere else
+    is a real error and must not be silently dropped."""
+    path = str(tmp_path / "log.jsonl")
+    ref = _write_rows(path, _rows(3))
+    lines = ref.splitlines(keepends=True)
+    broken = lines[0] + lines[1][: len(lines[1]) // 2] + b"\n" + lines[2]
+    with open(path, "wb") as f:
+        f.write(broken)
+    with pytest.raises(ValueError, match="mid-file"):
+        RecordLog(path).load()
+
+
+def test_torn_tail_repair_truncates_once_before_append(tmp_path):
+    """The repair physically removes the fragment (so the file itself is
+    healthy for any other reader), and a healthy file is left untouched."""
+    path = str(tmp_path / "log.jsonl")
+    ref = _write_rows(path, _rows(2))
+    healthy_size = os.path.getsize(path)
+    with open(path, "ab") as f:
+        f.write(b'{"task": "t0", "conf')   # torn tail
+    log = RecordLog(path)
+    log.append({"task": "t0", "config": [5], "latency": 1.0,
+                "features": []})
+    data = open(path, "rb").read()
+    assert b'"conf' not in data.replace(b'"config"', b"")
+    assert data[:healthy_size] == ref
+    # second instance on the now-healthy file: no-op repair
+    size = os.path.getsize(path)
+    RecordLog(path).append({"task": "t0", "config": [6], "latency": 1.0,
+                            "features": []})
+    assert os.path.getsize(path) > size

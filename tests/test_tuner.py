@@ -1,4 +1,6 @@
 """End-to-end tuner behaviour: ARCO + baselines on real conv tasks."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -35,17 +37,53 @@ def test_arco_beats_hw_frozen_baselines_long_run(space):
     """The paper's headline: co-optimizing hardware knobs beats software-only
     tuning (baselines run the default accelerator geometry).
 
-    Quarantined (fails at seed): ARCO's long-run advantage is not reproduced
-    on this conv task yet — ROADMAP keeps the search-quality investigation
-    (MAPPO hyperparams / CS batch schedule) open."""
+    Resolved by the ROADMAP search-quality investigation (see
+    ``benchmarks/search_quality_sweep.py``): with the paper's *constant*
+    CS batch the surrogate refits too rarely to exploit late-run signal
+    and ARCO lost to the baselines on 3/5 seeds; a decaying batch
+    schedule (``TunerConfig.b_growth=0.6`` — same 288-measurement total,
+    more refits) won on 5/5 swept seeds at ~1.7x below the software-only
+    optimum.  Entropy 0.003..0.1 and n_steps 128 moved medians < 15%.
+    Stays quarantined only because it is a multi-minute multi-seed run;
+    the seeded short-horizon test below guards the same property in
+    tier-1."""
     cfg = TunerConfig(iteration_opt=6, b_measure=48, episodes_per_iter=3,
                       mappo=mappo.MappoConfig(n_steps=64, n_envs=16),
-                      gbt_rounds=20)
-    r_arco = arco_tune(space, cfg)
-    r_atvm = autotvm_tune(space, cfg)
-    r_rand = random_tune(space, cfg)
-    assert r_arco.best_latency < r_atvm.best_latency
-    assert r_arco.best_latency < r_rand.best_latency
+                      gbt_rounds=20, b_growth=0.6)
+    for seed in (0, 1, 2):
+        scfg = dataclasses.replace(cfg, seed=seed)
+        r_arco = arco_tune(space, scfg)
+        r_atvm = autotvm_tune(space, scfg)
+        r_rand = random_tune(space, scfg)
+        assert r_arco.best_latency < r_atvm.best_latency, f"seed {seed}"
+        assert r_arco.best_latency < r_rand.best_latency, f"seed {seed}"
+
+
+def test_arco_short_horizon_convergence_deterministic(space):
+    """Seeded, deterministic replacement for the long-run assertion in
+    tier-1: at a fixed seed and a 160-measurement budget with the decayed
+    CS batch schedule, ARCO must land within 25% of the exhaustively
+    enumerated space optimum and strictly beat both hw-frozen baselines
+    at the same seed and budget.  Everything is seeded (MAPPO, CS, GBT,
+    the baselines' SA/sampling), so this either always passes or always
+    fails — no flake budget."""
+    import jax.numpy as jnp
+    grids = np.meshgrid(*[np.arange(len(c)) for c in space.choices],
+                        indexing="ij")
+    all_cfg = np.stack([g.reshape(-1) for g in grids], axis=1)
+    optimum = float(np.min(np.asarray(
+        space.measure(jnp.asarray(all_cfg, jnp.int32)))))
+
+    cfg = TunerConfig(iteration_opt=5, b_measure=32, episodes_per_iter=3,
+                      mappo=mappo.MappoConfig(n_steps=48, n_envs=16),
+                      gbt_rounds=20, seed=1, b_growth=0.6)
+    r = arco_tune(space, cfg, budget=160)
+    assert r.n_measurements <= 160
+    assert r.best_latency <= optimum * 1.25
+    r_atvm = autotvm_tune(space, cfg, budget=160)
+    r_rand = random_tune(space, cfg, budget=160)
+    assert r.best_latency < r_atvm.best_latency
+    assert r.best_latency < r_rand.best_latency
 
 
 def test_baselines_respect_frozen_hardware_knobs(space):

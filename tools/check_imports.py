@@ -38,7 +38,9 @@ REQUIRED = (
     "repro.compiler.records",
     "repro.compiler.report",
     "repro.compiler.session",
+    "repro.compiler.surrogate_store",
     "repro.compiler.task",
+    "repro.compiler.zoo",
     "repro.core.tuner",
     "repro.core.baselines",
     "repro.launch.autotune",
