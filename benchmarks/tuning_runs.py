@@ -11,7 +11,11 @@ trend at ~6x less wall time.
 co-optimization benchmark (ResNet-18 coopt vs hw-frozen vs per-layer
 fantasy at equal budget) and writes the standardized bench-artifact
 document (:func:`write_bench_artifact`) — the ``BENCH_*.json`` convention
-perf-trajectory tooling diffs across commits.
+perf-trajectory tooling diffs across commits.  ``--bench hetero`` swaps
+in the heterogeneous-partitioning benchmark instead: K=2 pipeline netopt
+vs the single-chip K=1 netopt vs the DiGamma-style genetic baseline on
+the mixed conv-front + GEMM-tail ``resnet-bert`` zoo network, all at
+equal measurement budget.
 """
 from __future__ import annotations
 
@@ -238,6 +242,54 @@ def netopt_bench(workers: int = 0, timeout_s: Optional[float] = None,
     }
 
 
+def hetero_tuner_config() -> TunerConfig:
+    """Small deterministic per-layer tuner for the hetero bench: the
+    comparison is between *outer* search strategies (K=1 netopt vs K=2
+    netopt vs genetic), so the inner software tuner just needs to be
+    identical and cheap across all three arms."""
+    return TunerConfig(iteration_opt=8, b_measure=8, episodes_per_iter=2,
+                       mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                       gbt_rounds=10)
+
+
+def hetero_bench(workers: int = 0, timeout_s: Optional[float] = None,
+                 layer_budget: int = 16, refine_budget: int = 48) -> Dict:
+    """Heterogeneous partitioning on the mixed ``resnet-bert`` network
+    (ResNet-18 conv front, BERT GEMM tail): K=2 pipeline co-optimization
+    vs single-chip K=1 co-optimization vs the DiGamma-style genetic
+    baseline over the same joint (partition, hw) space, every arm at the
+    same total measurement budget; returns the flat metrics dict."""
+    from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
+                                       network_genetic_hw_tune)
+    from repro.compiler.zoo import get_network
+    tasks = list(get_network("resnet-bert").tasks)
+    base = dict(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                layer_budget=layer_budget, refine_budget=refine_budget,
+                tuner=hetero_tuner_config())
+    t0 = time.perf_counter()
+    k1 = NetworkCoOptimizer(tasks, NetOptConfig(**base), workers=workers,
+                            timeout_s=timeout_s, name="resnet-bert").run()
+    k2 = NetworkCoOptimizer(tasks, NetOptConfig(k_chips=2, **base),
+                            workers=workers, timeout_s=timeout_s,
+                            name="resnet-bert").run()
+    ga = network_genetic_hw_tune(tasks, NetOptConfig(k_chips=2, **base),
+                                 workers=workers, timeout_s=timeout_s,
+                                 name="resnet-bert")
+    return {
+        "k1_network_latency_s": k1.network_latency,
+        "k2_network_latency_s": k2.network_latency,
+        "genetic_network_latency_s": ga.network_latency,
+        "k2_speedup_vs_k1": k1.network_latency / k2.network_latency,
+        "k2_speedup_vs_genetic": ga.network_latency / k2.network_latency,
+        "k2_cut": float(k2.partition["cuts"][0]),
+        "k1_measurements": k1.total_measurements,
+        "k2_measurements": k2.total_measurements,
+        "genetic_measurements": ga.total_measurements,
+        "budget_per_layer": NetOptConfig(**base).total_layer_budget(),
+        "wall_time_s": time.perf_counter() - t0,
+    }
+
+
 if __name__ == "__main__":
     from repro.compiler.executor import add_worker_args, validate_worker_args
     ap = argparse.ArgumentParser(description=__doc__)
@@ -245,12 +297,25 @@ if __name__ == "__main__":
                     help="re-tune even if a cached sweep exists "
                          "(REPRO_FORCE=1 also works)")
     ap.add_argument("--json-out", default=None, metavar="BENCH_netopt.json",
-                    help="run the netopt benchmark and write the "
+                    help="run the selected benchmark and write the "
                          "standardized bench artifact here (skips the sweep)")
+    ap.add_argument("--bench", choices=("netopt", "hetero"),
+                    default="netopt",
+                    help="which --json-out benchmark to run: netopt = "
+                         "ResNet-18 shared-chip coopt; hetero = K=2 "
+                         "pipeline vs K=1 vs genetic on resnet-bert")
     add_worker_args(ap)
     args = ap.parse_args()
     validate_worker_args(ap, args)
-    if args.json_out:
+    if args.json_out and args.bench == "hetero":
+        metrics = hetero_bench(workers=args.workers,
+                               timeout_s=args.timeout_s)
+        write_bench_artifact(
+            args.json_out, "hetero_resnet_bert", metrics,
+            config={"paper": PAPER, "networks": ["resnet-bert"],
+                    "k_chips": [1, 2], "baseline": "genetic",
+                    "budget_per_layer": metrics.pop("budget_per_layer")})
+    elif args.json_out:
         metrics = netopt_bench(workers=args.workers,
                                timeout_s=args.timeout_s)
         write_bench_artifact(

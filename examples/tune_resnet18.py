@@ -97,8 +97,8 @@ def coopt_comparison(args, cfg, tasks):
     print(f"co-optimized vs frozen: "
           f"{frozen.network_latency / coopt.network_latency:.2f}x faster; "
           f"co-optimized / fantasy = {ratio:.2f} ({note})")
-    print("\nhw-candidate Pareto trace (cum. measurements -> network us):")
-    for meas, lat in coopt.pareto():
+    print("\nhw-candidate progress trace (cum. measurements -> network us):")
+    for meas, lat in coopt.progress():
         print(f"  {meas:6d} -> {lat * 1e6:9.1f}")
 
 

@@ -129,12 +129,18 @@ def _run_tune(args) -> int:
                       records=args.records, seed=args.seed,
                       workers=args.workers, timeout_s=args.timeout_s,
                       surrogates=store, network=label)
-    _emit(session.run().to_dict(), args)
+    summary = session.run().to_dict()
+    if args.compact and store is not None:
+        stats = store.compact()
+        print(f"compacted {store.path}: kept {stats['kept']}, dropped "
+              f"{stats['dropped']}", file=sys.stderr)
+    _emit(summary, args)
     return 0
 
 
 def _run_netopt(args) -> int:
     from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
+                                       network_genetic_hw_tune,
                                        network_hw_frozen_tune,
                                        network_random_hw_tune)
     if sum(bool(x) for x in (args.model, args.matmul, args.network)) != 1:
@@ -146,17 +152,25 @@ def _run_netopt(args) -> int:
                        hw_per_round=args.hw_per_round,
                        layer_budget=args.layer_budget,
                        refine_budget=args.refine_budget,
-                       tuner=TunerConfig.fast(), seed=args.seed)
+                       tuner=TunerConfig.fast(), seed=args.seed,
+                       k_chips=args.k_chips,
+                       stop_on_stable_ranking=args.stop_on_stable_ranking)
     name = _network_label(args)
+    store = store_from_args(args)
     kw = dict(records=args.records, workers=args.workers,
-              timeout_s=args.timeout_s, name=name,
-              surrogates=store_from_args(args))
+              timeout_s=args.timeout_s, name=name, surrogates=store)
     if args.baseline == "hw-frozen":
         rep = network_hw_frozen_tune(tasks, cfg, **kw)
     elif args.baseline == "random-hw":
         rep = network_random_hw_tune(tasks, cfg, **kw)
+    elif args.baseline == "genetic":
+        rep = network_genetic_hw_tune(tasks, cfg, **kw)
     else:
         rep = NetworkCoOptimizer(tasks, cfg, **kw).run()
+    if args.compact and store is not None:
+        stats = store.compact()
+        print(f"compacted {store.path}: kept {stats['kept']}, dropped "
+              f"{stats['dropped']}", file=sys.stderr)
     print(rep.summary(), file=sys.stderr)
     _emit(rep.to_dict(), args)
     return 0
@@ -200,10 +214,20 @@ def main(argv=None) -> int:
         "netopt", help="network co-optimization: one shared accelerator "
                        "config, per-layer software mappings")
     _add_task_args(net)
-    net.add_argument("--baseline", choices=("hw-frozen", "random-hw"),
+    net.add_argument("--baseline",
+                     choices=("hw-frozen", "random-hw", "genetic"),
                      default=None,
                      help="run a network-level baseline instead of the "
-                          "co-optimizer (equal total budget)")
+                          "co-optimizer (equal total budget; genetic = "
+                          "DiGamma-style GA over the same partition space)")
+    net.add_argument("--k-chips", type=int, default=1,
+                     help="heterogeneous pipeline stages (1-3): partition "
+                          "the network at contiguous cuts, one accelerator "
+                          "config per stage (1 = the single shared chip)")
+    net.add_argument("--stop-on-stable-ranking", type=int, default=0,
+                     help="end the outer search once the hw surrogate's "
+                          "top-k candidate ranking is unchanged for this "
+                          "many consecutive refits (0 = off)")
     net.add_argument("--seed-candidates", type=int, default=3,
                      help="round-0 hw candidates (incl. the default chip)")
     net.add_argument("--hw-rounds", type=int, default=2,

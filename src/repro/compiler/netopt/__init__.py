@@ -1,35 +1,41 @@
 """``repro.compiler.netopt`` — network-scope HW/SW co-optimization.
 
-One shared accelerator configuration for the whole DNN, per-layer
-software mappings under it: an outer hardware-candidate search
-(network-scope GBT + Confidence Sampling over the global hardware value
-lists) drives inner pinned-subspace :class:`~repro.compiler.session.
-Session`\\ s (``DesignSpace.pin`` per layer, shared software GBT, one
-worker pool, per-(hw, layer) JSONL warm resume).  Result is a typed
-:class:`NetworkReport`: chosen chip, per-layer mappings, end-to-end
-multiplicity-weighted latency, hardware-candidate Pareto trace.
+K accelerator configurations for the whole DNN (K=1: one shared chip —
+the v1 behavior; K=2..3: a heterogeneous pipeline over contiguous
+network cuts), per-layer software mappings under them: an outer
+partition search (network-scope GBT + Confidence Sampling over
+:class:`PartitionSpace`) drives inner pinned-subspace
+:class:`~repro.compiler.session.Session`\\ s (``DesignSpace.pin`` per
+layer, shared software GBT, one worker pool, per-(hw, layer[, segment])
+JSONL warm resume).  Result is a typed :class:`NetworkReport`: chosen
+chip set + cuts, per-layer mappings, pipeline-aware end-to-end latency,
+best-so-far progress curve, latency-vs-silicon Pareto frontier.
 
 Quickstart::
 
     from repro.compiler import TuningTask
     from repro.compiler.netopt import NetworkCoOptimizer, NetOptConfig
     rep = NetworkCoOptimizer(TuningTask.conv_tasks("resnet-18"),
-                             NetOptConfig(layer_budget=16),
+                             NetOptConfig(layer_budget=16, k_chips=2),
                              records="artifacts/r18.netopt.jsonl",
                              name="resnet-18").run()
-    print(rep.summary())           # one chip, 17 layers, end-to-end us
+    print(rep.summary())           # chip set, 17 layers, end-to-end us
 
-CLI: ``python -m repro.compiler.cli netopt --model resnet-18``.
+CLI: ``python -m repro.compiler.cli netopt --model resnet-18 --k-chips 2``.
 """
 from repro.compiler.netopt.hwspace import (HW_KNOB_NAMES, HW_KNOBS,
                                            HwCandidateSpace, hw_dict, hw_tag)
+from repro.compiler.netopt.partition import HwPartition, PartitionSpace
 from repro.compiler.netopt.loop import (NetOptConfig, NetworkCoOptimizer,
                                         netopt_tune, network_hw_frozen_tune,
                                         network_random_hw_tune)
+from repro.compiler.netopt.genetic import network_genetic_hw_tune
 from repro.compiler.netopt.report import NetworkReport
 
 __all__ = [
     "HW_KNOBS", "HW_KNOB_NAMES", "HwCandidateSpace", "hw_dict", "hw_tag",
+    "HwPartition", "PartitionSpace",
     "NetOptConfig", "NetworkCoOptimizer", "NetworkReport", "netopt_tune",
     "network_hw_frozen_tune", "network_random_hw_tune",
+    "network_genetic_hw_tune",
 ]

@@ -1,21 +1,26 @@
 """Network-scope HW/SW co-optimization — the paper's actual claim.
 
-One accelerator configuration serves the whole DNN while per-layer
-software agents map every layer onto it.  The outer loop proposes shared
-hardware candidates (scored by a network-scope GBT over aggregate
-workload features, Confidence Sampling picking which candidates to pay
-for); the inner loop evaluates one candidate by pinning every layer's
-hardware knobs (``DesignSpace.pin``) and running the per-layer software
-agents as one interleaved :class:`~repro.compiler.session.Session` —
-shared software GBT across layers *and* across hardware candidates,
-per-layer measurements fanned over one
+A small set of K accelerator configurations serves the whole DNN while
+per-layer software agents map every layer onto its assigned chip.  The
+outer loop proposes :class:`~repro.compiler.netopt.partition.HwPartition`
+candidates — contiguous pipeline cuts plus one hw value-tuple per stage
+(K=1 is exactly the v1 single-chip search) — scored by a network-scope
+GBT with Confidence Sampling picking which candidates to pay for.  The
+inner loop evaluates one partition by pinning every layer's hardware
+knobs to its stage's values (``DesignSpace.pin``) and running the
+per-layer software agents as one interleaved
+:class:`~repro.compiler.session.Session` — shared software GBT across
+layers *and* across candidates, per-layer measurements fanned over one
 :class:`~repro.compiler.executor.SubprocessExecutor` pool, per-(hw,
-layer) JSONL records so a revisited candidate (the refinement pass, a
-resumed run) replays from cache.  A candidate's reward is the
-multiplicity-weighted end-to-end network latency.
+layer[, segment]) JSONL records so a revisited candidate (the refinement
+pass, a resumed run) replays from cache.  A candidate's reward is the
+pipeline-aware end-to-end latency: the slowest stage's
+multiplicity-weighted layer sum plus the inter-stage ICI transfer — for
+K=1, the plain multiplicity-weighted network latency.
 
 This is the DiGamma-style joint HW-config x per-layer-mapping search on
-top of the pieces PRs 2-3 built; contrast with ``examples/
+top of the pieces PRs 2-3 built (and ``netopt.genetic`` supplies the
+DiGamma GA itself as the honest baseline); contrast with ``examples/
 tune_resnet18.py``'s historical sum of per-layer optima, which gives
 every conv layer its own fictional chip.
 
@@ -38,8 +43,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.compiler.netopt.hwspace import (HW_KNOBS, HW_KNOB_NAMES,
-                                           HwCandidateSpace, N_HW_FEAT,
-                                           hw_dict, hw_tag)
+                                           HwCandidateSpace, hw_dict, hw_tag)
+from repro.compiler.netopt.partition import HwPartition, PartitionSpace
 from repro.compiler.netopt.report import NetworkReport
 from repro.compiler.oracle import Oracle, decode_config
 from repro.compiler.records import RecordLog
@@ -77,6 +82,14 @@ class NetOptConfig:
     tuner: TunerConfig = dataclasses.field(default_factory=TunerConfig.fast)
     hw_gbt_rounds: int = 24       # network-scope hardware surrogate
     seed: int = 0
+    k_chips: int = 1              # heterogeneous pipeline stages (1..3)
+    # Transfer-aware early stop: end the outer CS loop once the hardware
+    # surrogate's top-``stable_top_k`` candidate ranking has been
+    # unchanged for this many consecutive refits (0 = never stop early).
+    # A warm-started surrogate converges its ranking in fewer rounds, so
+    # this is what converts transferred rows into measurement savings.
+    stop_on_stable_ranking: int = 0
+    stable_top_k: int = 3
 
     @property
     def n_candidates(self) -> int:
@@ -87,12 +100,21 @@ class NetOptConfig:
                 + self.refine_budget)
 
 
+def _coerce_partition(cand) -> HwPartition:
+    """Accept a bare hw value-tuple wherever a partition is expected (the
+    single-chip baselines, pre-v2 callers): it is the K=1 partition."""
+    if isinstance(cand, HwPartition):
+        return cand
+    return HwPartition((), (tuple(int(v) for v in cand),))
+
+
 class _Evaluator:
     """Shared candidate-evaluation machinery for the co-optimizer and the
-    fixed-candidate network baselines: owns the task list, the shared
-    software GBT, the (optional) worker pool and record log, evaluates one
-    hardware candidate as a pinned multi-task session, and keeps the
-    running trace the final :class:`NetworkReport` is built from."""
+    network baselines (frozen / random / genetic): owns the task list,
+    the partition space, the shared software GBT, the (optional) worker
+    pool and record log, evaluates one partition as a pinned multi-task
+    session, and keeps the running trace the final
+    :class:`NetworkReport` is built from."""
 
     def __init__(self, tasks: Iterable[TuningTask], cfg: NetOptConfig,
                  records: Union[None, str, RecordLog], workers: int,
@@ -119,7 +141,8 @@ class _Evaluator:
         self.timeout_s = timeout_s
         self.name = name
         self.algo = algo
-        self.hw = HwCandidateSpace.from_tasks(self.tasks)
+        self.pspace = PartitionSpace(self.tasks, cfg.k_chips)
+        self.hw = self.pspace.base  # the v1 all-tasks value unions
         # ONE software surrogate across layers and hardware candidates:
         # config features carry the hw knob values, so measurements under
         # candidate A warm-start the mapping search under candidate B.
@@ -139,9 +162,9 @@ class _Evaluator:
                                         warm_seeded=False)
         self.executor = None
         self.trace: List[Dict[str, object]] = []
-        # values tuple -> {"network_latency": float, "session": SessionReport}
-        self.evaluated: Dict[Tuple[int, ...], Dict[str, object]] = {}
+        self.evaluated: Dict[HwPartition, Dict[str, object]] = {}
         self.cum_measurements = 0
+        self.early_stop: Dict[str, object] = {}
         self.t0 = time.perf_counter()
 
     def open(self) -> None:
@@ -161,20 +184,33 @@ class _Evaluator:
             self._tmp_records_dir = None
 
     # ------------------------------------------------------------- evaluate
-    def evaluate(self, values: Sequence[int], layer_budget: int,
-                 phase: str) -> float:
-        """Score one shared hardware candidate: pin every task, run the
-        per-layer software agents as one interleaved session, return the
-        multiplicity-weighted network latency.  Re-evaluating the same
-        candidate (refinement, resume) replays warm from the per-(hw,
-        layer) records before paying for anything new."""
-        values = tuple(int(v) for v in values)
-        tag = hw_tag(values)
-        ptasks = [t.pinned(HW_KNOBS, values, tag) for t in self.tasks]
+    def evaluate(self, cand, layer_budget: int, phase: str) -> float:
+        """Score one partition (or bare K=1 value-tuple): pin every task
+        to its stage's values, run the per-layer software agents as one
+        interleaved session, return the pipeline-aware end-to-end
+        latency.  Re-evaluating the same candidate (refinement, resume)
+        replays warm from the per-(hw, layer) records before paying for
+        anything new."""
+        part = _coerce_partition(cand)
+        segs = part.segments(len(self.tasks))
+        tags = part.tags()
+        ptasks: List[TuningTask] = []
+        report_key: Dict[str, str] = {}
+        for (a, b), values, tag in zip(segs, part.hw_values, tags):
+            for t in self.tasks[a:b]:
+                ptasks.append(t.pinned(HW_KNOBS, values, tag))
+                report_key[t.name] = f"{t.name}#{tag}"
         sr = Session(ptasks, tuner=self.cfg.tuner, budget=layer_budget,
                      records=self.records, gbt=self.sw_gbt,
                      executor=self.executor).run()
-        net_lat = sr.network_latency()
+        if part.k == 1:
+            # literally the session's weighted sum — the v1 reward, kept
+            # verbatim as the K=1 bit-for-bit anchor
+            net_lat = sr.network_latency()
+        else:
+            per_task = {t.name: float(sr.reports[report_key[t.name]]
+                                      .best_latency) for t in self.tasks}
+            net_lat = self.pspace.pipeline_latency(part, per_task)
         new = sum(r.oracle_stats.get("misses", 0) for r in sr)
         self.cum_measurements += new
         # a layer whose best is the executor failure-penalty sentinel
@@ -184,67 +220,124 @@ class _Evaluator:
         # sentinel, still transfers)
         tainted = any(r.best_latency == Oracle.penalty_latency for r in sr)
         if self.store is not None and not tainted and self.store.add(
-                "hw", self.hw.features(values),
+                "hw", self.pspace.features(part),
                 -np.log(max(float(net_lat), 1e-12)), network=self.name,
-                family=self.family):
+                family=self.family, segs=part.k):
             self.surrogate_stats["hw_rows_saved"] = \
                 int(self.surrogate_stats.get("hw_rows_saved", 0)) + 1
-        prev = self.evaluated.get(values)
+        prev = self.evaluated.get(part)
         if prev is None or net_lat <= float(prev["network_latency"]):
-            self.evaluated[values] = {"network_latency": net_lat,
-                                      "session": sr}
+            self.evaluated[part] = {"network_latency": net_lat,
+                                    "session": sr}
         best = min(float(e["network_latency"])
                    for e in self.evaluated.values())
-        self.trace.append({
-            "hw": hw_dict(values), "network_latency": float(net_lat),
+        row = {
+            "hw": (hw_dict(part.hw_values[0]) if part.k == 1
+                   else [hw_dict(v) for v in part.hw_values]),
+            "network_latency": float(net_lat),
             "layer_budget": int(layer_budget), "new_measurements": int(new),
             "cum_measurements": int(self.cum_measurements),
-            "best_so_far": best, "phase": phase})
+            "best_so_far": best, "phase": phase,
+            "area_mm2": self.pspace.area_mm2(part),
+            "trajectory": self._trajectory(part, sr, report_key, new)}
+        if part.k > 1:
+            row["cuts"] = list(part.cuts)
+        self.trace.append(row)
         return float(net_lat)
 
-    def best_values(self) -> Tuple[int, ...]:
+    def _trajectory(self, part: HwPartition, sr, report_key: Dict[str, str],
+                    new: int) -> List[List[float]]:
+        """Within-candidate improvement points ``[paid_measurements,
+        network_latency]`` reconstructed from the per-task tuning
+        histories, merged round-major (the session schedules tasks
+        round-robin, so round r of every task precedes round r+1 of any).
+        History counts include record-replayed hits; they are rescaled so
+        the trajectory ends at exactly this evaluation's paid (miss)
+        count — what lets ``NetworkReport.measurements_to`` resolve the
+        first target hit *inside* a candidate's session instead of at
+        candidate granularity."""
+        hists = {t.name: list(sr.reports[report_key[t.name]].history)
+                 for t in self.tasks}
+        n_rounds = max((len(h) for h in hists.values()), default=0)
+        recorded_total = sum(h[-1][0] for h in hists.values() if h)
+        if recorded_total <= 0:
+            return []
+        per_task: Dict[str, float] = {}
+        prev_count = {name: 0 for name in hists}
+        recorded = 0
+        best_net = float("inf")
+        traj: List[List[float]] = []
+        for rnd in range(n_rounds):
+            for t in self.tasks:
+                h = hists[t.name]
+                if rnd >= len(h):
+                    continue
+                count, task_best = int(h[rnd][0]), float(h[rnd][1])
+                recorded += count - prev_count[t.name]
+                prev_count[t.name] = count
+                per_task[t.name] = task_best
+                if len(per_task) < len(self.tasks):
+                    continue  # network latency undefined until all tasks
+                net = self.pspace.pipeline_latency(part, per_task)
+                if net < best_net:
+                    best_net = net
+                    paid = int(round(recorded * new / recorded_total))
+                    traj.append([paid, float(net)])
+        return traj
+
+    def best_partition(self) -> HwPartition:
         return min(self.evaluated,
-                   key=lambda v: float(self.evaluated[v]["network_latency"]))
+                   key=lambda p: float(self.evaluated[p]["network_latency"]))
 
     # --------------------------------------------------------------- report
     def report(self) -> NetworkReport:
-        values = self.best_values()
-        entry = self.evaluated[values]
+        part = self.best_partition()
+        entry = self.evaluated[part]
         sr = entry["session"]
-        hw_cfg = hw_dict(values)
-        tag = hw_tag(values)
+        segs = part.segments(len(self.tasks))
+        tags = part.tags()
+        hw_cfgs = [hw_dict(v) for v in part.hw_values]
         layers: Dict[str, Dict[str, object]] = {}
+        assignment: Dict[str, int] = {}
         n_layers = 0
-        for t in self.tasks:
-            rep = sr.reports[f"{t.name}#{tag}"]
-            pspace = t.space.pin(HW_KNOBS, values)
-            settings = (decode_config(pspace, rep.best_config)
-                        if rep.best_config else {})
-            layers[t.name] = {
-                "mapping": {k: v for k, v in settings.items()
-                            if k not in HW_KNOB_NAMES},
-                "hardware": dict(hw_cfg),
-                "hw_utilized": {k: settings[k] for k in HW_KNOB_NAMES
-                                if k in settings},
-                "latency": float(rep.best_latency),
-                "multiplicity": int(t.multiplicity),
-            }
-            n_layers += t.multiplicity
+        for j, ((a, b), values, tag) in enumerate(
+                zip(segs, part.hw_values, tags)):
+            for t in self.tasks[a:b]:
+                rep = sr.reports[f"{t.name}#{tag}"]
+                pspace = t.space.pin(HW_KNOBS, values)
+                settings = (decode_config(pspace, rep.best_config)
+                            if rep.best_config else {})
+                layers[t.name] = {
+                    "mapping": {k: v for k, v in settings.items()
+                                if k not in HW_KNOB_NAMES},
+                    "hardware": dict(hw_cfgs[j]),
+                    "hw_utilized": {k: settings[k] for k in HW_KNOB_NAMES
+                                    if k in settings},
+                    "latency": float(rep.best_latency),
+                    "multiplicity": int(t.multiplicity),
+                    "segment": j,
+                }
+                assignment[t.name] = j
+                n_layers += t.multiplicity
         return NetworkReport(
-            network=self.name, algo=self.algo, hw_config=hw_cfg,
+            network=self.name, algo=self.algo, hw_configs=hw_cfgs,
             layers=layers,
             network_latency=float(entry["network_latency"]),
             n_layers=n_layers, hw_candidates=len(self.evaluated),
             total_measurements=self.cum_measurements,
             wall_time_s=time.perf_counter() - self.t0, trace=self.trace,
-            surrogates=dict(self.surrogate_stats))
+            surrogates=dict(self.surrogate_stats),
+            partition={"k": part.k, "cuts": list(part.cuts),
+                       "assignment": assignment},
+            k_chips=part.k, early_stop=dict(self.early_stop))
 
 
 class NetworkCoOptimizer:
-    """The outer hardware search: seed candidates (always including the
-    network-default chip, so the candidate set dominates the frozen
+    """The outer partition search: seed candidates (always including the
+    network-default chip set, so the candidate set dominates the frozen
     baseline's), then ``hw_rounds`` rounds of GBT-scored Confidence
-    Sampling over the full candidate enumeration, then a refinement pass
+    Sampling over the candidate enumeration (full for K=1, a
+    deterministic sampled pool for K>=2), then a refinement pass
     deepening the winner's software mappings with the leftover budget."""
 
     def __init__(self, tasks: Iterable[TuningTask],
@@ -256,12 +349,17 @@ class NetworkCoOptimizer:
         self.cfg = cfg or NetOptConfig()
         self._ev = _Evaluator(tasks, self.cfg, records, workers, timeout_s,
                               name, "netopt", surrogates=surrogates)
+        self.pspace = self._ev.pspace
+        self._pool: Optional[List[HwPartition]] = None
         self.hw_gbt = GBTModel(n_rounds=self.cfg.hw_gbt_rounds,
-                               n_features=N_HW_FEAT, seed=self.cfg.seed)
+                               n_features=self.pspace.n_features,
+                               seed=self.cfg.seed)
         # Cross-network transfer of the hardware surrogate: prime from
         # other networks' stored (hw features, fitness) rows — the
         # aggregate-descriptor half of the features is what lets one GBT
-        # rank candidates for a network it has never measured.
+        # rank candidates for a network it has never measured.  The row
+        # dimension (14 for K=1, 15K for the segment-descriptor variant)
+        # keys which stored rows are compatible.
         self.warm_hw_rows = (self._ev.store.warm_start(
             self.hw_gbt, "hw", exclude_network=name,
             family=self._ev.family)
@@ -274,8 +372,10 @@ class NetworkCoOptimizer:
         return self._ev.hw
 
     def run(self) -> NetworkReport:
-        cfg, ev = self.cfg, self._ev
+        cfg, ev, ps = self.cfg, self._ev, self.pspace
         rng = np.random.default_rng(cfg.seed)
+        prev_rank: Optional[Tuple[int, ...]] = None
+        stable = 0
         try:
             ev.open()
             if self.warm_hw_rows > 0:
@@ -285,8 +385,7 @@ class NetworkCoOptimizer:
                 # candidate set must dominate the frozen baseline's) and
                 # the largest geometry (VMEM frontier probe; a weakly
                 # trained transfer surrogate must not cost that insurance).
-                cands = ev.hw.seed_values(min(cfg.seed_candidates, 2),
-                                          ev.tasks, rng)
+                cands = ps.seed_partitions(min(cfg.seed_candidates, 2), rng)
                 if cfg.seed_candidates > len(cands):
                     props = self._propose(cfg.seed_candidates - len(cands),
                                           cfg.seed, exclude=cands)
@@ -297,61 +396,130 @@ class NetworkCoOptimizer:
                     # degenerate space can leave nothing to propose)
                     ev.surrogate_stats["warm_seeded"] = bool(props)
             else:
-                cands = ev.hw.seed_values(cfg.seed_candidates, ev.tasks, rng)
+                cands = ps.seed_partitions(cfg.seed_candidates, rng)
             for rnd in range(cfg.hw_rounds + 1):
-                fresh: List[Tuple[Tuple[int, ...], float]] = []
-                for values in cands:
-                    if tuple(values) in ev.evaluated:
+                fresh: List[Tuple[HwPartition, float]] = []
+                for part in cands:
+                    if part in ev.evaluated:
                         continue
-                    lat = ev.evaluate(values, cfg.layer_budget,
+                    lat = ev.evaluate(part, cfg.layer_budget,
                                       "seed" if rnd == 0 else "cs")
-                    fresh.append((tuple(values), lat))
+                    fresh.append((part, lat))
                 if fresh:  # refit the hardware surrogate on the new points
-                    X = np.stack([ev.hw.features(v) for v, _ in fresh])
+                    X = np.stack([ps.features(p) for p, _ in fresh])
                     y = -np.log(np.maximum(
                         np.asarray([l for _, l in fresh]), 1e-12))
                     self.hw_gbt.update(X, y)
+                    if cfg.stop_on_stable_ranking > 0:
+                        rank = self._top_ranking(cfg.stable_top_k)
+                        stable = stable + 1 if rank == prev_rank else 0
+                        prev_rank = rank
+                        if (stable >= cfg.stop_on_stable_ranking
+                                and rnd < cfg.hw_rounds):
+                            self._mark_early_stop(rnd, stable)
+                            break
                 if rnd == cfg.hw_rounds:
                     break
                 cands = self._propose(cfg.hw_per_round, cfg.seed + rnd + 1)
             if cfg.refine_budget > 0:
                 # the winner replays its layer_budget measurements from the
                 # records cache, then continues the software search deeper
-                ev.evaluate(ev.best_values(),
+                ev.evaluate(ev.best_partition(),
                             cfg.layer_budget + cfg.refine_budget, "refine")
             return ev.report()
         finally:
             ev.close()
 
+    def _mark_early_stop(self, rnd: int, stable: int) -> None:
+        """Record the transfer-aware early stop: remaining CS rounds are
+        skipped; ``measurements_saved`` is the per-layer budget they
+        would have spent (upper bound — sessions can replay part of it),
+        summed over layers."""
+        cfg, ev = self.cfg, self._ev
+        skipped = (cfg.hw_rounds - rnd) * cfg.hw_per_round
+        saved = skipped * cfg.layer_budget * len(ev.tasks)
+        ev.early_stop = {"round": int(rnd), "stable_refits": int(stable),
+                         "skipped_candidates": int(skipped),
+                         "measurements_saved": int(saved)}
+        ev.trace.append({"phase": "early_stop",
+                         "cum_measurements": int(ev.cum_measurements),
+                         **ev.early_stop})
+
+    def _top_ranking(self, top_k: int) -> Tuple[int, ...]:
+        """The surrogate's current top-k candidate ranking over a FIXED
+        enumeration (full for K=1, the seed-0 pool for K>=2) — comparing
+        it across refits is what detects ranking convergence."""
+        ps = self.pspace
+        if ps.k == 1:
+            feats = np.stack([ps.base.features(ps.base.values(ix))
+                              for ix in ps.base.all_index_configs()])
+        else:
+            feats = np.stack([ps.features(p) for p in self._scored_pool()])
+        scores = np.asarray(self.hw_gbt.predict(feats), np.float64)
+        order = np.lexsort((np.arange(len(scores)), -scores))
+        return tuple(int(i) for i in order[:max(top_k, 0)])
+
+    def _scored_pool(self) -> List[HwPartition]:
+        if self._pool is None:
+            self._pool = self.pspace.candidate_pool(self.cfg.seed)
+        return self._pool
+
     def _propose(self, n: int, seed: int,
-                 exclude: Sequence[Tuple[int, ...]] = ()
-                 ) -> List[Tuple[int, ...]]:
-        """Confidence Sampling over the full hardware enumeration, scored
-        by the network-scope GBT; already-evaluated (and ``exclude``d)
+                 exclude: Sequence[HwPartition] = ()
+                 ) -> List[HwPartition]:
+        """Confidence Sampling over the candidate enumeration, scored by
+        the network-scope GBT; already-evaluated (and ``exclude``d)
         candidates are skipped and the batch is topped up by predicted
         score."""
-        ev = self._ev
-        all_idx = ev.hw.all_index_configs()
-        feats = np.stack([ev.hw.features(ev.hw.values(ix))
-                          for ix in all_idx])
+        ev, ps = self._ev, self.pspace
+        if ps.k == 1:
+            hw = ps.base
+            all_idx = hw.all_index_configs()
+            feats = np.stack([hw.features(hw.values(ix))
+                              for ix in all_idx])
+            scores = np.asarray(self.hw_gbt.predict(feats), np.float64)
+            picked = CS.confidence_sampling(
+                all_idx, scores, n + len(ev.evaluated) + len(exclude),
+                hw.n_choices, seed=seed)
+            out: List[HwPartition] = []
+            seen = ({p.hw_values[0] for p in ev.evaluated}
+                    | {p.hw_values[0] for p in exclude})
+            for ix in picked:
+                v = hw.values(ix)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(HwPartition((), (v,)))
+                if len(out) >= n:
+                    return out
+            for i in np.argsort(-scores):  # top-up: best predicted
+                v = hw.values(all_idx[i])
+                if v not in seen:
+                    seen.add(v)
+                    out.append(HwPartition((), (v,)))
+                if len(out) >= n:
+                    break
+            return out
+        pool = self._scored_pool()
+        enc = np.stack([ps.encode(p) for p in pool])
+        feats = np.stack([ps.features(p) for p in pool])
         scores = np.asarray(self.hw_gbt.predict(feats), np.float64)
-        picked = CS.confidence_sampling(all_idx, scores,
-                                        n + len(ev.evaluated) + len(exclude),
-                                        ev.hw.n_choices, seed=seed)
-        out: List[Tuple[int, ...]] = []
-        seen = set(ev.evaluated) | {tuple(v) for v in exclude}
-        for ix in picked:
-            v = ev.hw.values(ix)
-            if v not in seen:
-                seen.add(v)
-                out.append(v)
+        picked = CS.confidence_sampling(
+            enc, scores, n + len(ev.evaluated) + len(exclude),
+            ps.n_choices, seed=seed)
+        seen_p = set(ev.evaluated) | set(exclude)
+        out = []
+        for vec in picked:
+            p = ps.decode(vec)
+            if p not in seen_p:
+                seen_p.add(p)
+                out.append(p)
             if len(out) >= n:
                 return out
-        for i in np.argsort(-scores):  # top-up: best predicted unevaluated
-            v = ev.hw.values(all_idx[i])
-            if v not in seen:
-                seen.add(v)
-                out.append(v)
+        for i in np.argsort(-scores):
+            p = pool[int(i)]
+            if p not in seen_p:
+                seen_p.add(p)
+                out.append(p)
             if len(out) >= n:
                 break
         return out
@@ -413,7 +581,7 @@ def network_random_hw_tune(tasks: Iterable[TuningTask],
             attempts += 1
             v = ev.hw.values([rng.integers(0, len(c))
                               for c in ev.hw.choices])
-            if v in ev.evaluated:
+            if _coerce_partition(v) in ev.evaluated:
                 continue
             ev.evaluate(v, per_layer, "random")
         return ev.report()

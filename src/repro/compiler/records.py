@@ -95,6 +95,26 @@ class RecordLog:
         finally:
             os.close(fd)
 
+    def rewrite(self, rows: List[Dict]) -> None:
+        """Atomically replace the whole file with ``rows`` (tmp file in
+        the same directory + ``os.replace``, so a reader or a kill never
+        sees a partial state) — the seam store compaction rewrites
+        through.  The append-only contract still holds for *measurement*
+        records; rewrite exists for derived stores that prune."""
+        import tempfile
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".rewrite-", suffix=".jsonl",
+                                   dir=d)
+        try:
+            os.write(fd, "".join(json.dumps(row) + "\n"
+                                 for row in rows).encode())
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        os.replace(tmp, self.path)
+        self._tail_checked = True
+
     def _truncate_torn_tail(self) -> None:
         """Drop a trailing partial line (no terminating newline) — the same
         row ``load()`` already ignores, removed for good before we append

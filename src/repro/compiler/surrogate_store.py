@@ -48,8 +48,11 @@ from repro.core.cost_model import GBTModel
 # Bump when the meaning of a row changes (feature normalization, target
 # transform, kinds).  Rows additionally carry their feature dimension, so
 # differently-shaped spaces coexist in one store and loading filters to
-# the consumer's layout.
-SCHEMA = "repro-surrogate/1"
+# the consumer's layout.  v2 adds the segment-descriptor variant of hw
+# rows (``segs`` = pipeline stages K; K>=2 rows carry K*15-dim features)
+# — v1 rows are valid v2 rows with ``segs`` = 1, so v1 stores still load.
+SCHEMA = "repro-surrogate/2"
+COMPATIBLE_SCHEMAS = ("repro-surrogate/1", SCHEMA)
 KINDS = ("sw", "hw")   # software (per-config) / hardware (per-candidate)
 
 # The fitness value of an executor failure-penalty row
@@ -111,7 +114,7 @@ class SurrogateStore:
             rows = []
             for row in self._log.load():
                 schema = row.get("schema")
-                if schema != SCHEMA:
+                if schema not in COMPATIBLE_SCHEMAS:
                     raise SurrogateSchemaError(
                         f"{self.path}: row schema {schema!r} != {SCHEMA!r} "
                         "— the store was written by an incompatible "
@@ -130,15 +133,19 @@ class SurrogateStore:
 
     # ----------------------------------------------------------------- write
     def add(self, kind: str, x, y: float, network: str = "",
-            task: str = "", family: str = "core") -> bool:
+            task: str = "", family: str = "core", segs: int = 1) -> bool:
         """Append one training row; returns False when skipped (readonly
         store or exact duplicate).  ``family`` (:func:`space_family`)
-        marks feature-semantic compatibility — loads filter on it."""
+        marks feature-semantic compatibility — loads filter on it.
+        ``segs`` is the segment-descriptor variant marker for hw rows
+        (pipeline stages K of the candidate the row scores; 1 = the v1
+        single-chip layout)."""
         return self.add_many(kind, [x], [y], network=network, task=task,
-                             family=family) == 1
+                             family=family, segs=segs) == 1
 
     def add_many(self, kind: str, X, y, network: str = "",
-                 task: str = "", family: str = "core") -> int:
+                 task: str = "", family: str = "core",
+                 segs: int = 1) -> int:
         """Append a batch of training rows in one write (one fd + one
         ``os.write`` for the whole batch — this sits on the tuning hot
         path, once per GBT refit); returns how many rows were actually
@@ -158,7 +165,8 @@ class SurrogateStore:
             self._keys.add(key)
             new_rows.append({"schema": SCHEMA, "kind": kind, "dim": len(xi),
                              "family": family, "network": network,
-                             "task": task, "x": xi, "y": yi})
+                             "task": task, "segs": int(segs),
+                             "x": xi, "y": yi})
         rows.extend(new_rows)
         self._log.append_many(new_rows)
         return len(new_rows)
@@ -183,6 +191,7 @@ class SurrogateStore:
                              "family": row.get("family", "core"),
                              "network": row.get("network", ""),
                              "task": row.get("task", ""),
+                             "segs": int(row.get("segs", 1)),
                              "x": row["x"], "y": row["y"]})
         rows.extend(new_rows)
         self._log.append_many(new_rows)
@@ -233,6 +242,43 @@ class SurrogateStore:
         prime = getattr(gbt, "prime", gbt.update)
         prime(X, y)
         return len(X)
+
+    # -------------------------------------------------------------- compact
+    def compact(self, keep_best: int = 32) -> Dict[str, int]:
+        """Rewrite the store keeping, per (kind, network, family, dim,
+        segs) group, only the *Pareto-informative* rows (each row that
+        improved on every earlier fitness in its group — the search's
+        improvement frontier, what a warm start needs to rank the
+        promising region) plus the ``keep_best`` highest-fitness rows.
+        Bounds store growth to ``O(groups * keep_best + frontier)``
+        regardless of how many runs accumulated — the pre-work for
+        generator-scale corpora.  Atomic rewrite (same guarantee as the
+        appends); returns ``{"kept": ..., "dropped": ...}``."""
+        if self.readonly:
+            raise ValueError("cannot compact a readonly store")
+        rows = self._load()
+        groups: Dict[Tuple, List[Dict]] = {}
+        for r in rows:  # insertion order == append order within a group
+            key = (r["kind"], r.get("network", ""),
+                   r.get("family", "core"), r["dim"],
+                   int(r.get("segs", 1)))
+            groups.setdefault(key, []).append(r)
+        keep_ids = set()
+        for grp in groups.values():
+            best = -np.inf
+            for r in grp:  # improvement frontier, in append order
+                if r["y"] > best:
+                    best = r["y"]
+                    keep_ids.add(id(r))
+            for r in sorted(grp, key=lambda r: -r["y"])[:keep_best]:
+                keep_ids.add(id(r))
+        kept = [r for r in rows if id(r) in keep_ids]
+        dropped = len(rows) - len(kept)
+        if dropped:
+            self._log.rewrite(kept)
+            self._rows = kept
+            self._keys = {_row_key(r["kind"], r["x"], r["y"]) for r in kept}
+        return {"kept": len(kept), "dropped": dropped}
 
 
 @dataclasses.dataclass
@@ -305,6 +351,10 @@ def add_surrogate_args(ap) -> None:
     ap.add_argument("--save-surrogates", default=None, metavar="SURR.jsonl",
                     help="append this run's GBT training rows here "
                          "(accumulating store; may equal --warm-from)")
+    ap.add_argument("--compact", action="store_true",
+                    help="after the run, compact --save-surrogates down "
+                         "to its Pareto-informative + per-(network, "
+                         "family) best rows (bounds store growth)")
 
 
 def store_from_args(args) -> Optional[SurrogateStore]:
@@ -317,6 +367,9 @@ def store_from_args(args) -> Optional[SurrogateStore]:
       first, so the output file is self-contained.
     """
     warm, save = args.warm_from, args.save_surrogates
+    if getattr(args, "compact", False) and not save:
+        raise SystemExit("--compact needs --save-surrogates (it rewrites "
+                         "the store this run appends to)")
     same = bool(warm and save
                 and os.path.realpath(warm) == os.path.realpath(save))
     if warm and not same and not os.path.exists(warm):

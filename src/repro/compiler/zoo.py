@@ -36,7 +36,7 @@ class NetworkTask:
     multiplicities — the unit ``netopt`` co-optimizes one chip for."""
 
     name: str
-    kind: str                       # "conv" | "gemm" | "pod"
+    kind: str                       # "conv" | "gemm" | "mixed" | "pod"
     description: str
     tasks: Tuple[TuningTask, ...]
 
@@ -126,6 +126,25 @@ def _bert_gemm() -> NetworkTask:
         description="BERT-base encoder GEMM stack (seq 128): QKV/out "
                     "projections + FFN up/down over 12 blocks",
         tasks=tuple(t))
+
+
+def _resnet_bert() -> NetworkTask:
+    """Mixed conv-front + GEMM-tail network — the heterogeneous-partition
+    scenario: the ResNet-18 backbone's large-spatial convs and the BERT
+    GEMM stack want different chip geometries (conv layers lean on
+    spatial M-tiling with moderate Ci, the transformer GEMMs on deep
+    K/N tiles), so a K=2 pipeline cut between the halves can beat any
+    single shared chip end-to-end.  ``BENCH_hetero.json`` runs netopt
+    K=1 vs K=2 vs the genetic baseline on (a truncation of) this
+    network."""
+    front = list(TuningTask.conv_tasks("resnet-18"))
+    tail = list(_bert_gemm().tasks)
+    return NetworkTask(
+        name="resnet-bert", kind="mixed",
+        description="ResNet-18 conv front + BERT GEMM tail — the K-chip "
+                    "partitioning scenario (no single chip wins both "
+                    "halves)",
+        tasks=tuple(front + tail))
 
 
 # ------------------------------------------------------------ pod network
@@ -241,6 +260,7 @@ ZOO: Dict[str, Callable[[], NetworkTask]] = {
     "vgg-11": _vgg_stack,
     "mobilenet-dw": _mobilenet_dw,
     "bert-gemm": _bert_gemm,
+    "resnet-bert": _resnet_bert,
     "pod-cells": _pod_cells,
     "pod-cells-4b": _pod_cells_4b,
 }

@@ -402,3 +402,23 @@ def network_random_hw_tune(tasks, cfg=None, n_candidates: int = 4,
                                           records=records, workers=workers,
                                           timeout_s=timeout_s, name=name,
                                           surrogates=surrogates)
+
+
+def network_genetic_hw_tune(tasks, cfg=None, k_chips=None,
+                            population: int = 6, records=None,
+                            workers: int = 0, timeout_s=None,
+                            name: str = "network", surrogates=None):
+    """DiGamma-style genetic baseline over the joint (partition,
+    hw-tuple) space: the same contiguity-constrained K-chip candidates
+    and the same pinned-session evaluator as the co-optimizer, searched
+    by tournament selection + crossover + mutation at the same total
+    measurement budget — the control that keeps the MARL outer-search
+    claim honest at K >= 2 (and an extra baseline at K = 1)."""
+    from repro.compiler.netopt import genetic as _genetic
+    return _genetic.network_genetic_hw_tune(tasks, cfg=cfg,
+                                            k_chips=k_chips,
+                                            population=population,
+                                            records=records,
+                                            workers=workers,
+                                            timeout_s=timeout_s, name=name,
+                                            surrogates=surrogates)

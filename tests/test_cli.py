@@ -92,6 +92,50 @@ def test_netopt_zoo_network_and_surrogate_flags(tmp_path, capsys):
     capsys.readouterr()
 
 
+def test_netopt_k_chips_pipeline(tmp_path, capsys):
+    out = tmp_path / "k2.json"
+    rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "3",
+               "--k-chips", "2", "--seed-candidates", "2",
+               "--hw-rounds", "0", "--layer-budget", "2",
+               "--refine-budget", "0", "--out", str(out)])
+    assert rc == 0
+    capsys.readouterr()
+    rep = NetworkReport.from_dict(json.loads(out.read_text()))
+    assert rep.k_chips == 2
+    assert len(rep.hw_configs) == 2
+    assert rep.partition["k"] == 2 and len(rep.partition["cuts"]) == 1
+    assert rep.verify_shared_hardware()
+    assert "pipeline" in rep.summary()
+
+
+def test_netopt_baseline_genetic(capsys):
+    rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "2",
+               "--k-chips", "2", "--seed-candidates", "1",
+               "--hw-rounds", "0", "--layer-budget", "2",
+               "--refine-budget", "0", "--baseline", "genetic"])
+    assert rc == 0
+    rep = NetworkReport.from_dict(json.loads(capsys.readouterr().out))
+    assert rep.algo == "genetic"
+    assert all(r["phase"] == "genetic" for r in rep.trace)
+    assert rep.verify_shared_hardware()
+    # equal-budget contract: n_evals = n_candidates + 1 at split budget
+    assert rep.trace[0]["layer_budget"] == max(
+        ((1 + 1) * 2 + 0) // (1 + 1), 1)
+
+
+def test_netopt_compact_flag(tmp_path, capsys):
+    store = str(tmp_path / "surr.jsonl")
+    rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "1",
+               "--seed-candidates", "2", "--hw-rounds", "0",
+               "--layer-budget", "2", "--refine-budget", "0",
+               "--save-surrogates", store, "--compact"])
+    assert rc == 0
+    assert "compacted" in capsys.readouterr().err
+    with pytest.raises(SystemExit):  # --compact without a writable store
+        main(["netopt", "--model", "resnet-18", "--compact"])
+    capsys.readouterr()
+
+
 def test_netopt_baseline_hw_frozen(capsys):
     rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "1",
                "--seed-candidates", "1", "--hw-rounds", "0",

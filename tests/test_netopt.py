@@ -151,16 +151,22 @@ def test_coopt_shared_chip_and_equal_budget_win(tasks, tmp_path):
     assert frozen.trace[0]["layer_budget"] == cfg.total_layer_budget()
     assert rep.total_measurements <= cfg.total_layer_budget() * len(tasks)
     assert rep.network_latency <= frozen.network_latency
-    # trace/pareto bookkeeping
+    # trace/progress bookkeeping
     assert rep.hw_candidates >= cfg.seed_candidates
     assert [r["phase"] for r in rep.trace][0] == "seed"
     assert rep.trace[-1]["phase"] == "refine"
-    assert rep.pareto()[-1][1] == rep.network_latency
+    assert rep.progress()[-1][1] == rep.network_latency
     assert rep.total_measurements == rep.trace[-1]["cum_measurements"]
+    # multi-objective pareto: latency-sorted, area strictly descending
+    front = rep.pareto()
+    assert front and front[0][0] == rep.network_latency
+    assert all(a[0] < b[0] and a[1] > b[1]
+               for a, b in zip(front, front[1:]))
     # JSON round-trip
     back = NetworkReport.from_dict(json.loads(json.dumps(rep.to_dict())))
     assert back.network_latency == rep.network_latency
     assert back.hw_config == rep.hw_config
+    assert back.progress() == rep.progress()
     assert back.pareto() == rep.pareto()
 
 

@@ -1,0 +1,375 @@
+"""``repro.compiler.netopt`` v2 — heterogeneous K-chip partitioning.
+
+Covers the partition primitives (``HwPartition`` / ``PartitionSpace``:
+contiguity, canonicalization, encode/decode, features, pipeline latency,
+silicon area), the K=1 regression anchor (byte-identical ``to_dict()``
+against the pre-refactor golden file, modulo the new fields), K>=2
+co-optimization (pipeline win, warm resume at zero measurements), the
+DiGamma-style genetic baseline, the stable-ranking early stop, the
+within-candidate ``measurements_to`` resolution, and surrogate-store
+compaction.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.compiler.netopt import (HwPartition, NetOptConfig,
+                                   NetworkCoOptimizer, NetworkReport,
+                                   PartitionSpace, network_genetic_hw_tune)
+from repro.compiler.netopt.genetic import crossover, mutate
+from repro.compiler.surrogate_store import SurrogateStore
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import DesignSpace
+from repro.core.tuner import TunerConfig
+from repro.hw.analytical import chip_area_mm2, interchip_transfer_s
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(ROOT, "tests", "golden", "netopt_k1_golden.json")
+
+# EXACTLY the fixtures the golden file was captured with (pre-refactor);
+# any drift here invalidates the anchor comparison, not the code under test
+WL_BIG = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
+WL_MID = dict(b=1, h=28, w=28, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+TINY = TunerConfig(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                   mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                   gbt_rounds=10)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return [TuningTask.from_space("c1", DesignSpace.for_conv2d(WL_BIG),
+                                  multiplicity=2),
+            TuningTask.from_space("c2", DesignSpace.for_conv2d(WL_MID),
+                                  multiplicity=1)]
+
+
+def _tiny_netcfg(**kw):
+    base = dict(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                layer_budget=8, refine_budget=8, tuner=TINY)
+    base.update(kw)
+    return NetOptConfig(**base)
+
+
+# ------------------------------------------------------- partition space
+
+def test_partition_space_geometry(tasks):
+    ps = PartitionSpace(tasks, k_chips=2)
+    assert ps.k == 2
+    assert ps.n_features == 2 * (14 + 1)   # per-segment block + weight
+    # k clamps to the task count and MAX_K
+    assert PartitionSpace(tasks, k_chips=5).k == 2
+    assert PartitionSpace(tasks[:1], k_chips=2).k == 1
+    # contiguity: every enumerated cut vector is strictly increasing and
+    # interior
+    p = ps.default_partition()
+    assert p.k == 2 and p.cuts == (1,)
+    assert p.segments(len(tasks)) == [(0, 1), (1, 2)]
+    with pytest.raises(ValueError):
+        HwPartition((1,), ((1, 64, 64),))   # k mismatch
+    # encode/decode round-trips through clamping canonicalization
+    vec = ps.encode(p)
+    assert ps.decode(vec) == p
+    wild = [999] * len(vec)
+    q = ps.decode(wild)
+    assert q.k == 2 and all(len(v) == 3 for v in q.hw_values)
+    # features dispatch on the PARTITION's k: a coerced single-chip value
+    # keeps the v1 14-dim layout even inside a K=2 space
+    f2 = ps.features(p)
+    assert f2.shape == (30,) and np.isfinite(f2).all()
+    k1 = PartitionSpace(tasks, k_chips=1)
+    f1 = k1.features(k1.default_partition())
+    assert f1.shape == (14,)
+    # tags: K=1 keeps the bare v1 tag (record-key compatibility), K>=2
+    # suffixes the stage
+    assert "#seg" not in k1.default_partition().tags()[0]
+    assert [t.endswith(f"#seg{j}") for j, t in enumerate(p.tags())] \
+        == [True, True]
+
+
+def test_partition_seeds_pool_and_balanced_cuts(tasks):
+    ps = PartitionSpace(tasks, k_chips=2)
+    rng = np.random.default_rng(0)
+    seeds = ps.seed_partitions(4, rng)
+    assert seeds[0] == ps.default_partition()
+    assert len(seeds) == len(set(seeds))
+    assert all(s.k == 2 for s in seeds)
+    assert ps.balanced_cuts() == (1,)
+    pool = ps.candidate_pool(seed=0, limit=16)
+    assert 0 < len(pool) <= 16
+    assert len(pool) == len(set(pool))
+    # deterministic: same seed, same pool
+    assert pool == ps.candidate_pool(seed=0, limit=16)
+
+
+def test_pipeline_latency_and_area(tasks):
+    ps = PartitionSpace(tasks, k_chips=2)
+    p = ps.default_partition()
+    lat = {"c1": 3e-5, "c2": 1e-5}   # per-instance; c1 has multiplicity 2
+    pipe = ps.pipeline_latency(p, lat)
+    xfer = interchip_transfer_s(ps.boundary_bytes(p)[0])
+    assert pipe == pytest.approx(max(2 * 3e-5, 1e-5) + xfer)
+    assert pipe < 2 * 3e-5 + 1e-5    # the pipelining win at equal chips
+    # K=1 degenerates to the plain weighted sum (no transfer term)
+    k1 = PartitionSpace(tasks, k_chips=1)
+    assert k1.pipeline_latency(k1.default_partition(), lat) \
+        == pytest.approx(7e-5)
+    # area grows with chip count and with geometry
+    assert ps.area_mm2(p) > k1.area_mm2(k1.default_partition()) > 0
+    assert chip_area_mm2(1, 256, 256) > chip_area_mm2(1, 64, 64) > 0
+    assert ps.boundary_bytes(p)[0] > 0
+
+
+# -------------------------------------------------- K=1 regression anchor
+
+def _subset(golden, new, path=""):
+    """Every golden key/element must appear bit-identically in ``new``;
+    new keys are the (allowed) v2 additions."""
+    if isinstance(golden, dict):
+        assert isinstance(new, dict), path
+        for k, v in golden.items():
+            assert k in new, f"{path}.{k} missing"
+            _subset(v, new[k], f"{path}.{k}")
+    elif isinstance(golden, list):
+        assert isinstance(new, list) and len(new) == len(golden), path
+        for i, (g, n) in enumerate(zip(golden, new)):
+            _subset(g, n, f"{path}[{i}]")
+    else:
+        assert golden == new, f"{path}: {golden!r} != {new!r}"
+
+
+def test_k1_partition_reproduces_pre_refactor_golden(tasks):
+    """The tentpole's regression anchor: a K=1 run of the refactored
+    partition code must produce a ``to_dict()`` that contains the
+    pre-refactor report byte-for-byte (same RNG draws, same tags, same
+    trace) — the new partition fields only ADD keys."""
+    cfg = _tiny_netcfg()
+    rep = NetworkCoOptimizer(tasks, cfg, name="toy").run().to_dict()
+    rep.pop("wall_time_s")
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    _subset(golden, rep)
+    added = set(rep) - set(golden)
+    assert added == {"early_stop", "hw_configs", "k_chips", "partition"}
+
+
+def test_k1_warm_resume_records_are_tag_compatible(tasks, tmp_path):
+    """K=1 record tags carry NO segment suffix, so pre-refactor record
+    files warm-resume unchanged."""
+    cfg = _tiny_netcfg()
+    path = str(tmp_path / "r.jsonl")
+    r1 = NetworkCoOptimizer(tasks, cfg, records=path, name="toy").run()
+    assert r1.total_measurements > 0
+    with open(path) as f:
+        assert all("#seg" not in json.loads(ln)["task"]
+                   for ln in f if ln.strip())
+    r2 = NetworkCoOptimizer(tasks, cfg, records=path, name="toy").run()
+    assert r2.total_measurements == 0
+
+
+# ------------------------------------------------------------ K>=2 co-opt
+
+def test_k2_coopt_pipeline_beats_k1_and_resumes(tasks, tmp_path):
+    cfg1, cfg2 = _tiny_netcfg(), _tiny_netcfg(k_chips=2)
+    r1 = NetworkCoOptimizer(tasks, cfg1, name="toy").run()
+    path = str(tmp_path / "k2.jsonl")
+    r2 = NetworkCoOptimizer(tasks, cfg2, records=path, name="toy").run()
+    assert r2.k_chips == 2 and len(r2.hw_configs) == 2
+    assert r2.partition["k"] == 2 and r2.partition["cuts"] == [1]
+    assert r2.verify_shared_hardware()
+    assert set(r2.partition["assignment"].values()) == {0, 1}
+    # max-over-stages <= sum: the pipeline reward makes K=2 dominate K=1
+    # on this 2-task toy (same candidate budget)
+    assert r2.network_latency <= r1.network_latency
+    # K>=2 trace rows carry the partition shape
+    assert all(isinstance(row["hw"], list) and row["cuts"] == [1]
+               for row in r2.trace)
+    # single-chip accessor refuses multi-chip reports
+    with pytest.raises(ValueError):
+        _ = r2.hw_config
+    # warm resume replays every (stage-tagged hw, layer) session from the
+    # record file
+    r3 = NetworkCoOptimizer(tasks, cfg2, records=path, name="toy").run()
+    assert r3.total_measurements == 0
+    assert r3.network_latency == r2.network_latency
+    assert r3.hw_configs == r2.hw_configs
+    # JSON round-trip keeps the partition fields
+    back = NetworkReport.from_dict(json.loads(json.dumps(r2.to_dict())))
+    assert back.partition == r2.partition
+    assert back.hw_configs == r2.hw_configs
+    assert back.pareto() == r2.pareto()
+
+
+def test_k2_surrogate_rows_keyed_by_segment_variant(tasks, tmp_path):
+    """K>=2 hw rows are a different feature dimension AND carry the segs
+    descriptor, so K=1 and K=2 runs never cross-contaminate warm starts."""
+    store = str(tmp_path / "s.jsonl")
+    NetworkCoOptimizer(tasks, _tiny_netcfg(), name="netA",
+                       surrogates=store).run()
+    NetworkCoOptimizer(tasks, _tiny_netcfg(k_chips=2), name="netA",
+                       surrogates=store).run()
+    rows = [json.loads(ln) for ln in open(store) if ln.strip()]
+    hw = [r for r in rows if r["kind"] == "hw"]
+    assert {r["dim"] for r in hw} == {14, 30}
+    assert all(r["segs"] == (1 if r["dim"] == 14 else 2) for r in hw)
+    s = SurrogateStore(store)
+    assert s.rows("hw", 14)[0].shape[1] == 14
+    assert s.rows("hw", 30)[0].shape[1] == 30
+
+
+# ------------------------------------------------------- genetic baseline
+
+def test_genetic_operators_preserve_validity(tasks):
+    ps = PartitionSpace(tasks, k_chips=2)
+    rng = np.random.default_rng(3)
+    a, b = ps.seed_partitions(2, rng)
+    for _ in range(32):
+        child = mutate(ps, crossover(ps, a, b, rng), rng)
+        assert child.k == 2
+        assert list(child.cuts) == sorted(set(child.cuts))
+        assert all(0 < c < len(tasks) for c in child.cuts)
+        # values stay inside each segment's table (canonicalized)
+        assert ps.canonical(child.cuts, child.hw_values) == child
+
+
+def test_genetic_baseline_equal_budget(tasks):
+    cfg = _tiny_netcfg(k_chips=2)
+    rep = network_genetic_hw_tune(tasks, cfg, name="toy")
+    assert rep.algo == "genetic"
+    assert rep.k_chips == 2
+    assert all(r["phase"] == "genetic" for r in rep.trace)
+    assert rep.verify_shared_hardware()
+    n_evals = cfg.n_candidates + 1
+    per_layer = max(cfg.total_layer_budget() // n_evals, 1)
+    assert rep.trace[0]["layer_budget"] == per_layer
+    assert rep.hw_candidates <= n_evals
+    # the GA never outspends the co-optimizer's upper bound
+    assert rep.total_measurements \
+        <= cfg.total_layer_budget() * len(tasks)
+    # k_chips override spelling used by repro.core.baselines
+    rep1 = network_genetic_hw_tune(tasks, _tiny_netcfg(), k_chips=2,
+                                   name="toy")
+    assert rep1.k_chips == 2
+
+
+# ------------------------------------------------------------- early stop
+
+def test_stop_on_stable_ranking_saves_measurements(tasks):
+    cfg = _tiny_netcfg(hw_rounds=3, stop_on_stable_ranking=1)
+    rep = NetworkCoOptimizer(tasks, cfg, name="toy").run()
+    es = rep.early_stop
+    assert es, "the toy landscape must trigger the stable-ranking stop"
+    assert es["stable_refits"] == 1
+    assert es["skipped_candidates"] == 2
+    assert es["measurements_saved"] \
+        == es["skipped_candidates"] * cfg.layer_budget * len(tasks)
+    # the marker row sits in the trace but never pollutes the curves
+    markers = [r for r in rep.trace if r.get("phase") == "early_stop"]
+    assert len(markers) == 1
+    assert markers[0]["measurements_saved"] == es["measurements_saved"]
+    assert rep.trace[-1]["phase"] == "refine"
+    assert all("network_latency" in r or r["phase"] == "early_stop"
+               for r in rep.trace)
+    assert rep.progress() and rep.pareto()
+    # fewer candidates than the no-stop budget allows
+    assert rep.hw_candidates < cfg.n_candidates
+    # off by default: no marker, full candidate count
+    rep0 = NetworkCoOptimizer(tasks, _tiny_netcfg(hw_rounds=3),
+                              name="toy").run()
+    assert not rep0.early_stop
+    assert rep0.hw_candidates == _tiny_netcfg(hw_rounds=3).n_candidates
+
+
+# ------------------------------------------- measurements_to trajectories
+
+def _synthetic_report(with_trajectory=True):
+    rows = [
+        {"hw": {}, "network_latency": 3.0, "layer_budget": 8,
+         "new_measurements": 16, "cum_measurements": 16,
+         "best_so_far": 3.0, "phase": "seed",
+         "trajectory": [[4, 5.0], [10, 3.0]]},
+        {"hw": {}, "network_latency": 2.0, "layer_budget": 8,
+         "new_measurements": 16, "cum_measurements": 32,
+         "best_so_far": 2.0, "phase": "cs",
+         "trajectory": [[6, 2.5], [12, 2.0]]},
+        {"phase": "early_stop", "cum_measurements": 32,
+         "measurements_saved": 16},
+        {"hw": {}, "network_latency": 1.0, "layer_budget": 16,
+         "new_measurements": 16, "cum_measurements": 48,
+         "best_so_far": 1.0, "phase": "refine",
+         "trajectory": [[16, 1.0]]},
+    ]
+    if not with_trajectory:
+        rows = [{k: v for k, v in r.items() if k != "trajectory"}
+                for r in rows]
+    return NetworkReport(network="x", algo="netopt",
+                         hw_configs=[{"tile_b": 1}], layers={},
+                         network_latency=1.0, n_layers=1, hw_candidates=3,
+                         total_measurements=48, wall_time_s=0.0,
+                         trace=rows)
+
+
+def test_measurements_to_resolves_inside_candidates():
+    rep = _synthetic_report()
+    # the fix: spend to first hit counts the FULL session spend up to the
+    # within-candidate improvement, not the end-of-candidate total
+    assert rep.measurements_to(5.0) == 4
+    assert rep.measurements_to(3.0) == 10      # not 16 (candidate end)
+    assert rep.measurements_to(2.2) == 16 + 12  # resolved in candidate 2
+    assert rep.measurements_to(1.0) == 32 + 16
+    assert rep.measurements_to(0.5) is None
+    # old documents (no trajectory) fall back to candidate granularity
+    old = _synthetic_report(with_trajectory=False)
+    assert old.measurements_to(3.0) == 16
+    assert old.measurements_to(2.2) == 32
+    assert old.measurements_to(1.0) == 48
+    # progress() skips the marker row
+    assert old.progress() == [(16, 3.0), (32, 2.0), (48, 1.0)]
+
+
+def test_real_runs_emit_monotone_trajectories(tasks):
+    rep = NetworkCoOptimizer(tasks, _tiny_netcfg(), name="toy").run()
+    assert any(row.get("trajectory") for row in rep.trace)
+    for row in rep.trace:
+        traj = row.get("trajectory", [])
+        lats = [lat for _, lat in traj]
+        assert lats == sorted(lats, reverse=True)   # improvements only
+        if traj:
+            assert traj[-1][0] <= row["new_measurements"]
+            assert traj[-1][1] == row["network_latency"]
+
+
+# ------------------------------------------------------ store compaction
+
+def test_store_compact_bounds_size_and_keeps_frontier(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    store = SurrogateStore(path)
+    rng = np.random.default_rng(0)
+    ys = rng.permutation(200).astype(float)
+    for i, y in enumerate(ys):
+        store.add("sw", rng.random(18), float(y), network="netA")
+    size_before = os.path.getsize(path)
+    stats = store.compact(keep_best=32)
+    assert stats["kept"] + stats["dropped"] == 200
+    assert os.path.getsize(path) < size_before
+    back = SurrogateStore(path)
+    n = back.counts()["sw"]
+    assert n == stats["kept"]
+    # the improvement frontier survives: running best-so-far y values
+    frontier = []
+    best = -np.inf
+    for y in ys:
+        if y > best:
+            best = y
+            frontier.append(float(y))
+    _, kept_y = back.rows("sw", 18)
+    assert set(frontier) <= set(kept_y.tolist())
+    # ... as do the top-32 targets
+    assert set(np.sort(ys)[-32:].tolist()) <= set(kept_y.tolist())
+    # compacting an already-compact store rewrites nothing
+    assert store.compact(keep_best=32)["dropped"] == 0
+    # readonly stores refuse
+    with pytest.raises(ValueError):
+        SurrogateStore(path, readonly=True).compact()

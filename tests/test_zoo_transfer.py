@@ -303,8 +303,11 @@ def test_network_report_roundtrips_surrogate_fields(tmp_path):
     assert back.measurements_to(rep.network_latency) == \
         rep.measurements_to(rep.network_latency)
     assert rep.measurements_to(0.0) is None
-    assert rep.measurements_to(float("inf")) == \
-        int(rep.trace[0]["cum_measurements"])
+    # an infinitely lax target is hit inside the FIRST candidate's session
+    # (the within-candidate trajectory resolves it at or before the
+    # candidate's cumulative spend)
+    hit = rep.measurements_to(float("inf"))
+    assert 0 < hit <= int(rep.trace[0]["cum_measurements"])
     # old documents (no surrogates key) deserialize with the default
     d = rep.to_dict()
     d.pop("surrogates")
@@ -353,10 +356,27 @@ def test_committed_bench_artifacts_are_valid():
     tr = _load_benchmarks("tuning_runs")
     paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
     assert {os.path.basename(p) for p in paths} >= \
-        {"BENCH_netopt.json", "BENCH_transfer.json"}
+        {"BENCH_netopt.json", "BENCH_transfer.json", "BENCH_hetero.json"}
     for p in paths:
         doc = tr.validate_bench_doc(json.load(open(p)))
         assert doc["git_rev"] != "unknown", p
+
+
+def test_hetero_bench_artifact_shows_pipeline_win():
+    """The committed BENCH_hetero.json must demonstrate the netopt-v2
+    headline: on the mixed conv+GEMM network, K=2 pipeline co-optimization
+    strictly beats BOTH the single-chip K=1 run and the DiGamma-style
+    genetic baseline on end-to-end latency at equal budget."""
+    with open(os.path.join(ROOT, "BENCH_hetero.json")) as f:
+        doc = json.load(f)
+    m = doc["metrics"]
+    assert m["k2_network_latency_s"] < m["k1_network_latency_s"]
+    assert m["k2_network_latency_s"] < m["genetic_network_latency_s"]
+    assert m["k2_speedup_vs_k1"] > 1.0
+    assert m["k2_speedup_vs_genetic"] > 1.0
+    # the pipeline cut is interior (a real 2-stage partition, not a
+    # degenerate everything-on-one-chip split)
+    assert 0 < m["k2_cut"] < 12
 
 
 def test_transfer_bench_artifact_shows_transfer_win():

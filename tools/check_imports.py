@@ -31,8 +31,10 @@ REQUIRED = (
     "repro.compiler.executor.pool",
     "repro.compiler.executor.stub",
     "repro.compiler.netopt",
+    "repro.compiler.netopt.genetic",
     "repro.compiler.netopt.hwspace",
     "repro.compiler.netopt.loop",
+    "repro.compiler.netopt.partition",
     "repro.compiler.netopt.report",
     "repro.compiler.oracle",
     "repro.compiler.records",
