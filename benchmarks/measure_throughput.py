@@ -11,10 +11,20 @@ the fan-out speedup is demonstrable without TPUs:
     PYTHONPATH=src python benchmarks/measure_throughput.py \
         --delay 0.5 --n 48 --workers 1,2,4,8 --json artifacts/throughput.json
 
-Worker pools are pre-spawned outside the timed region (a session reuses
-one pool across every Confidence-Sampling batch, so spawn cost amortizes
-away; the per-batch measurement rate is the number that gates
-optimization time).
+``--remote N[,M...]`` benchmarks the remote measurement fabric instead:
+for each fleet size it spawns that many loopback worker daemons
+(``python -m repro.compiler.executor.worker``), drives them through a
+``RemoteExecutor``, and reports meas/sec the same way — the TCP tax at
+its worst (localhost round-trips, zero-cost oracle); ``--bench-json
+BENCH_remote.json`` additionally emits the standardized bench artifact:
+
+    PYTHONPATH=src python benchmarks/measure_throughput.py \
+        --remote 1,2,4 --bench-json BENCH_remote.json
+
+Worker pools (and daemons) are pre-spawned outside the timed region (a
+session reuses one pool across every Confidence-Sampling batch, so spawn
+cost amortizes away; the per-batch measurement rate is the number that
+gates optimization time).
 
 NOTE: all heavy imports live inside ``main`` on purpose.  Spawned workers
 re-import this script as ``__mp_main__``, and a module-level jax/numpy
@@ -48,11 +58,12 @@ def distinct_configs(space, n: int):
     return out
 
 
-def run_once(space, configs, executor, label: str) -> dict:
+def run_once(space, configs, executor, label: str, spec=None) -> dict:
     import numpy as np
     from repro.compiler.oracle import SettingsOracle
     oracle = SettingsOracle(space, fn=None, executor=executor,
-                            task=f"throughput/{label}", own_executor=True)
+                            task=f"throughput/{label}", own_executor=True,
+                            worker_spec=spec)
     t0 = time.perf_counter()
     lat, _ = oracle.measure(configs)
     wall = time.perf_counter() - t0
@@ -63,6 +74,35 @@ def run_once(space, configs, executor, label: str) -> dict:
             "mean_latency": float(np.mean(lat))}
 
 
+def run_remote(space, configs, fleet_sizes, delay_s: float) -> list:
+    """meas/sec against N loopback daemons per fleet size: spawn the
+    daemons (outside the timed region, like pool pre-spawn), point one
+    ``RemoteExecutor`` at all of them, run the same batch."""
+    from repro.compiler.executor import (RemoteExecutor, WorkerSpec,
+                                         spawn_daemon)
+
+    spec = WorkerSpec(factory="repro.compiler.executor.stub:make_stub",
+                      kwargs={"delay_s": delay_s})
+    rows = []
+    for n_daemons in fleet_sizes:
+        procs, endpoints = [], []
+        try:
+            for _ in range(n_daemons):
+                proc, ep = spawn_daemon(slots=1)
+                procs.append(proc)
+                endpoints.append(ep)
+            ex = RemoteExecutor(endpoints)
+            row = run_once(space, configs, ex, f"remote[{n_daemons}]",
+                           spec=spec)
+            rows.append(row)
+        finally:
+            for proc in procs:
+                proc.terminate()
+            for proc in procs:
+                proc.wait(timeout=10)
+    return rows
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--delay", type=float, default=0.2,
@@ -71,8 +111,19 @@ def main() -> int:
                     help="measurements per batch (cold cache)")
     ap.add_argument("--workers", default="1,2,4",
                     help="comma-separated subprocess pool sizes")
+    ap.add_argument("--remote", default=None, metavar="N[,M...]",
+                    help="benchmark the remote fabric against these "
+                         "loopback daemon fleet sizes instead of local "
+                         "subprocess pools")
     ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--bench-json", default=None,
+                    metavar="BENCH_remote.json",
+                    help="with --remote: also write the standardized "
+                         "bench artifact (write_bench_artifact)")
     args = ap.parse_args()
+    if args.bench_json and not args.remote:
+        ap.error("--bench-json is the remote-fabric artifact; it needs "
+                 "--remote N[,M...]")
 
     from repro.compiler.executor import (SerialExecutor, SubprocessExecutor,
                                          WorkerSpec)
@@ -87,10 +138,15 @@ def main() -> int:
     rows = [run_once(space, configs,
                      SerialExecutor(fn=make_stub(delay_s=args.delay)),
                      "serial")]
-    for w in (int(x) for x in args.workers.split(",")):
-        pool = SubprocessExecutor(spec, workers=w)
-        pool.start()  # spawn outside the timed region (pool is reused)
-        rows.append(run_once(space, configs, pool, f"subprocess[{w}]"))
+    if args.remote:
+        rows += run_remote(space, configs,
+                           [int(x) for x in args.remote.split(",")],
+                           args.delay)
+    else:
+        for w in (int(x) for x in args.workers.split(",")):
+            pool = SubprocessExecutor(spec, workers=w)
+            pool.start()  # spawn outside the timed region (pool is reused)
+            rows.append(run_once(space, configs, pool, f"subprocess[{w}]"))
 
     base = rows[0]["meas_per_s"]
     print(f"\n{args.n} measurements/batch, {args.delay:.2f}s stub oracle")
@@ -110,6 +166,22 @@ def main() -> int:
         with open(args.json, "w") as f:
             json.dump({"delay_s": args.delay, "n": args.n, "runs": rows},
                       f, indent=1)
+    if args.bench_json:
+        # standardized bench artifact, same convention as BENCH_netopt/
+        # BENCH_hetero (sibling import: benchmarks/ is not a package)
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from tuning_runs import write_bench_artifact
+        metrics = {"serial_meas_per_s": rows[0]["meas_per_s"]}
+        for r in rows[1:]:
+            n_d = r["backend"].split("[")[1].rstrip("]")
+            metrics[f"remote{n_d}_meas_per_s"] = r["meas_per_s"]
+            metrics[f"remote{n_d}_speedup_vs_serial"] = \
+                r["speedup_vs_serial"]
+        write_bench_artifact(
+            args.bench_json, "remote_throughput", metrics,
+            config={"delay_s": args.delay, "n": args.n,
+                    "fleet_sizes": [int(x) for x in args.remote.split(",")],
+                    "transport": "tcp-loopback", "slots_per_daemon": 1})
     return 0
 
 

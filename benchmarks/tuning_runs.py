@@ -69,17 +69,17 @@ def unique_tasks() -> Dict[str, Task]:
 
 
 def _tune(framework: str, space, cfg: TunerConfig, workers: int = 0,
-          timeout_s: Optional[float] = None):
+          timeout_s: Optional[float] = None, remote=None):
     """One framework on one task via the session API; the typed report is
     JSON-serializable end-to-end (no hand re-packing)."""
     task = TuningTask.from_space("bench", space)
     report = Session(task, tuner=cfg, algo=framework, workers=workers,
-                     timeout_s=timeout_s).run().single
+                     timeout_s=timeout_s, remote=remote).run().single
     return report.to_dict()
 
 
 def run_sweep(force: bool = False, workers: int = 0,
-              timeout_s: Optional[float] = None) -> Dict:
+              timeout_s: Optional[float] = None, remote=None) -> Dict:
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, f"sweep_{'paper' if PAPER else 'default'}.json")
     if os.path.exists(path) and not force:
@@ -98,7 +98,7 @@ def run_sweep(force: bool = False, workers: int = 0,
         entry = {"workload": wl}
         for fw in FRAMEWORKS:
             entry[fw] = _tune(fw, task.space, cfg, workers=workers,
-                              timeout_s=timeout_s)
+                              timeout_s=timeout_s, remote=remote)
         out["tasks"][key] = entry
         print(f"[{i + 1}/{len(tasks)}] {wl['h']}x{wl['w']}x{wl['ci']}->"
               f"{wl['co']} k{wl['kh']}s{wl['stride']}: " +
@@ -212,7 +212,8 @@ def write_bench_artifact(path: str, bench: str, metrics: Dict[str, float],
 
 
 def netopt_bench(workers: int = 0, timeout_s: Optional[float] = None,
-                 layer_budget: int = 8, refine_budget: int = 8) -> Dict:
+                 layer_budget: int = 8, refine_budget: int = 8,
+                 remote=None) -> Dict:
     """ResNet-18 network co-optimization vs its equal-budget comparison
     points; returns the flat metrics dict for the bench artifact."""
     from repro.compiler.netopt import (NetOptConfig, NetworkCoOptimizer,
@@ -223,12 +224,14 @@ def netopt_bench(workers: int = 0, timeout_s: Optional[float] = None,
     tasks = TuningTask.conv_tasks("resnet-18")
     t0 = time.perf_counter()
     coopt = NetworkCoOptimizer(tasks, ncfg, workers=workers,
-                               timeout_s=timeout_s, name="resnet-18").run()
+                               timeout_s=timeout_s, remote=remote,
+                               name="resnet-18").run()
     frozen = network_hw_frozen_tune(tasks, ncfg, workers=workers,
-                                    timeout_s=timeout_s, name="resnet-18")
+                                    timeout_s=timeout_s, remote=remote,
+                                    name="resnet-18")
     fantasy = Session(tasks, tuner=ncfg.tuner,
                       budget=ncfg.total_layer_budget(), workers=workers,
-                      timeout_s=timeout_s).run()
+                      timeout_s=timeout_s, remote=remote).run()
     return {
         "coopt_network_latency_s": coopt.network_latency,
         "hw_frozen_network_latency_s": frozen.network_latency,
@@ -253,7 +256,8 @@ def hetero_tuner_config() -> TunerConfig:
 
 
 def hetero_bench(workers: int = 0, timeout_s: Optional[float] = None,
-                 layer_budget: int = 16, refine_budget: int = 48) -> Dict:
+                 layer_budget: int = 16, refine_budget: int = 48,
+                 remote=None) -> Dict:
     """Heterogeneous partitioning on the mixed ``resnet-bert`` network
     (ResNet-18 conv front, BERT GEMM tail): K=2 pipeline co-optimization
     vs single-chip K=1 co-optimization vs the DiGamma-style genetic
@@ -268,13 +272,14 @@ def hetero_bench(workers: int = 0, timeout_s: Optional[float] = None,
                 tuner=hetero_tuner_config())
     t0 = time.perf_counter()
     k1 = NetworkCoOptimizer(tasks, NetOptConfig(**base), workers=workers,
-                            timeout_s=timeout_s, name="resnet-bert").run()
+                            timeout_s=timeout_s, remote=remote,
+                            name="resnet-bert").run()
     k2 = NetworkCoOptimizer(tasks, NetOptConfig(k_chips=2, **base),
                             workers=workers, timeout_s=timeout_s,
-                            name="resnet-bert").run()
+                            remote=remote, name="resnet-bert").run()
     ga = network_genetic_hw_tune(tasks, NetOptConfig(k_chips=2, **base),
                                  workers=workers, timeout_s=timeout_s,
-                                 name="resnet-bert")
+                                 remote=remote, name="resnet-bert")
     return {
         "k1_network_latency_s": k1.network_latency,
         "k2_network_latency_s": k2.network_latency,
@@ -309,7 +314,8 @@ if __name__ == "__main__":
     validate_worker_args(ap, args)
     if args.json_out and args.bench == "hetero":
         metrics = hetero_bench(workers=args.workers,
-                               timeout_s=args.timeout_s)
+                               timeout_s=args.timeout_s,
+                               remote=args.remote)
         write_bench_artifact(
             args.json_out, "hetero_resnet_bert", metrics,
             config={"paper": PAPER, "networks": ["resnet-bert"],
@@ -317,7 +323,8 @@ if __name__ == "__main__":
                     "budget_per_layer": metrics.pop("budget_per_layer")})
     elif args.json_out:
         metrics = netopt_bench(workers=args.workers,
-                               timeout_s=args.timeout_s)
+                               timeout_s=args.timeout_s,
+                               remote=args.remote)
         write_bench_artifact(
             args.json_out, "netopt_resnet18", metrics,
             config={"paper": PAPER, "networks": ["resnet-18"],
@@ -325,4 +332,5 @@ if __name__ == "__main__":
     else:
         run_sweep(force=args.force
                   or os.environ.get("REPRO_FORCE", "0") == "1",
-                  workers=args.workers, timeout_s=args.timeout_s)
+                  workers=args.workers, timeout_s=args.timeout_s,
+                  remote=args.remote)

@@ -32,7 +32,7 @@ def software_only_comparison(args, cfg, tasks):
         records = args.records and f"{args.records}.{fw}.jsonl"
         sr = Session(tasks, tuner=cfg, algo=fw, budget=args.budget,
                      records=records, workers=args.workers,
-                     timeout_s=args.timeout_s).run()
+                     timeout_s=args.timeout_s, remote=args.remote).run()
         # per-task bests weighted by each task's own layer multiplicity
         totals[fw] = sr.network_latency()
         walls[fw] = sr.wall_time_s
@@ -64,16 +64,18 @@ def coopt_comparison(args, cfg, tasks):
     from repro.compiler.surrogate_store import store_from_args
     coopt = NetworkCoOptimizer(
         tasks, ncfg, records=args.records and f"{args.records}.netopt.jsonl",
-        workers=args.workers, timeout_s=args.timeout_s, name="resnet-18",
-        surrogates=store_from_args(args)).run()
+        workers=args.workers, timeout_s=args.timeout_s, remote=args.remote,
+        name="resnet-18", surrogates=store_from_args(args)).run()
     if coopt.surrogates:
         print(f"surrogate transfer: {coopt.surrogates}")
     frozen = network_hw_frozen_tune(
         tasks, ncfg, records=args.records and f"{args.records}.frozen.jsonl",
-        workers=args.workers, timeout_s=args.timeout_s, name="resnet-18")
+        workers=args.workers, timeout_s=args.timeout_s, remote=args.remote,
+        name="resnet-18")
     fantasy = Session(tasks, tuner=cfg, budget=total,
                       records=args.records and f"{args.records}.fantasy.jsonl",
-                      workers=args.workers, timeout_s=args.timeout_s).run()
+                      workers=args.workers, timeout_s=args.timeout_s,
+                      remote=args.remote).run()
 
     hw = ", ".join(f"{k}={v}" for k, v in coopt.hw_config.items())
     print(f"co-optimized       {coopt.network_latency * 1e6:10.1f} us   "

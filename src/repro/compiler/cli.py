@@ -128,6 +128,7 @@ def _run_tune(args) -> int:
                       share_cost_model=not args.independent,
                       records=args.records, seed=args.seed,
                       workers=args.workers, timeout_s=args.timeout_s,
+                      remote=args.remote,
                       surrogates=store, network=label)
     summary = session.run().to_dict()
     if args.compact and store is not None:
@@ -158,7 +159,8 @@ def _run_netopt(args) -> int:
     name = _network_label(args)
     store = store_from_args(args)
     kw = dict(records=args.records, workers=args.workers,
-              timeout_s=args.timeout_s, name=name, surrogates=store)
+              timeout_s=args.timeout_s, remote=args.remote, name=name,
+              surrogates=store)
     if args.baseline == "hw-frozen":
         rep = network_hw_frozen_tune(tasks, cfg, **kw)
     elif args.baseline == "random-hw":

@@ -14,6 +14,12 @@ batch.  This package turns measurement into a submit/drain pipeline:
   ``--xla_force_host_platform_device_count``; per-measurement timeouts,
   worker-crash isolation (a dead or hung worker yields a failure result
   and the pool respawns), and bounded in-flight depth.
+* :class:`RemoteExecutor` — the same protocol over TCP to worker daemons
+  (``python -m repro.compiler.executor.worker --listen HOST:PORT``),
+  with capability-based routing across heterogeneous pools and the
+  pool's fault semantics mapped onto connections (heartbeat loss,
+  bounded reconnect-with-backoff).  See ``wire`` for the frame protocol
+  and its trusted-network-only security posture.
 
 Results always flow back through the one memoizing, JSONL-persisting
 ``Oracle`` in the parent process, so memo/records/resume semantics are
@@ -31,15 +37,34 @@ from repro.compiler.executor.base import (Executor, MeasureHandle,
                                           resolve_factory,
                                           validate_worker_args)
 from repro.compiler.executor.pool import SubprocessExecutor
+from repro.compiler.executor.remote import RemoteExecutor
+from repro.compiler.executor.wire import parse_endpoints
+
+_WORKER_EXPORTS = ("WorkerDaemon", "spawn_daemon")
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.compiler.executor.worker` imports this
+    # package first, and an eager worker import here would trip runpy's
+    # found-in-sys.modules warning on every daemon start
+    if name in _WORKER_EXPORTS:
+        from repro.compiler.executor import worker
+        return getattr(worker, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "Executor",
     "MeasureHandle",
     "MeasureResult",
+    "RemoteExecutor",
     "SerialExecutor",
     "SubprocessExecutor",
+    "WorkerDaemon",
     "WorkerSpec",
     "add_worker_args",
+    "parse_endpoints",
     "resolve_factory",
+    "spawn_daemon",
     "validate_worker_args",
 ]

@@ -67,9 +67,9 @@ class MeasureResult:
 
 
 def add_worker_args(parser) -> None:
-    """The one definition of the ``--workers``/``--timeout-s`` CLI surface
-    (every tuning entry point shares it — keep help text and defaults from
-    drifting apart)."""
+    """The one definition of the ``--workers``/``--timeout-s``/``--remote``
+    CLI surface (every tuning entry point shares it — keep help text and
+    defaults from drifting apart)."""
     parser.add_argument(
         "--workers", type=int, default=0,
         help="parallel measurement worker processes (0 = in-process; "
@@ -77,14 +77,26 @@ def add_worker_args(parser) -> None:
     parser.add_argument(
         "--timeout-s", type=float, default=None,
         help="per-measurement timeout in seconds, counted from when the "
-             "measurement starts on a worker (needs --workers >= 1)")
+             "measurement starts on a worker (needs --workers >= 1 or "
+             "--remote)")
+    parser.add_argument(
+        "--remote", metavar="HOST:PORT[,HOST:PORT...]", default=None,
+        help="measure on remote worker daemons (python -m "
+             "repro.compiler.executor.worker --listen HOST:PORT) instead "
+             "of a local pool; mutually exclusive with --workers")
 
 
 def validate_worker_args(parser, args) -> None:
-    """Shared check: a timeout is only enforceable on a worker pool."""
-    if args.timeout_s is not None and not args.workers:
-        parser.error("--timeout-s needs --workers >= 1 (in-process "
-                     "measurements cannot be preempted)")
+    """Shared checks: one transport per session, and a timeout is only
+    enforceable where measurements can be preempted."""
+    if getattr(args, "remote", None) and args.workers:
+        parser.error("--remote and --workers are mutually exclusive: one "
+                     "measurement transport per session (remote daemons "
+                     "bring their own slots; drop --workers)")
+    if (args.timeout_s is not None and not args.workers
+            and not getattr(args, "remote", None)):
+        parser.error("--timeout-s needs --workers >= 1 or --remote "
+                     "(in-process measurements cannot be preempted)")
 
 
 class MeasureHandle:
@@ -145,6 +157,14 @@ class Executor:
 
     def close(self) -> None:
         """Release workers; the executor must not be used afterwards."""
+
+    def stats(self) -> Dict[str, object]:
+        """Uniform observability snapshot — every executor answers the
+        same keys so reports never ``hasattr``-sniff the transport.
+        Executors without workers or queues return the zeroed shape."""
+        return {"kind": "serial", "workers_alive": 0, "respawns": 0,
+                "queued": 0, "running": 0, "max_inflight": 0,
+                "jobs": 0, "failures": 0}
 
     def __enter__(self) -> "Executor":
         return self

@@ -174,6 +174,8 @@ class SubprocessExecutor(Executor):
         self.max_inflight = max_inflight  # None = adaptive
         self._ema_duration_s: Optional[float] = None
         self.respawns = 0  # workers killed (timeout) or found dead (crash)
+        self.jobs_done = 0  # resolved jobs (ok or failed)
+        self.failures = 0   # resolved with ok=False (incl. crashes)
         self._ctx = get_context("spawn")
         self._workers: List[_Worker] = []
         self._queue: Deque[_Job] = collections.deque()
@@ -244,13 +246,16 @@ class SubprocessExecutor(Executor):
                 ok=False, error="ExecutorClosed: job abandoned"))
         self._queue.clear()
 
-    def stats(self) -> Dict[str, int]:
-        return {"workers_alive": len(self._workers),
+    def stats(self) -> Dict[str, object]:
+        return {"kind": "subprocess",
+                "workers_alive": len(self._workers),
                 "respawns": self.respawns,
                 "queued": len(self._queue),
                 "running": sum(1 for w in self._workers
                                if w.job is not None),
-                "max_inflight": self._inflight_limit()}
+                "max_inflight": self._inflight_limit(),
+                "jobs": self.jobs_done,
+                "failures": self.failures}
 
     # ------------------------------------------------------------ internals
     def _inflight_limit(self) -> int:
@@ -311,6 +316,8 @@ class SubprocessExecutor(Executor):
         w.conn.close()
         self._workers.remove(w)
         if w.job is not None:
+            self.jobs_done += 1
+            self.failures += 1
             w.job.handle._resolve(MeasureResult(ok=False, error=error))
             w.job = None
 
@@ -370,6 +377,9 @@ class SubprocessExecutor(Executor):
                     continue
                 if w.job.started is not None:  # feed the adaptive bound
                     self._observe_duration(time.monotonic() - w.job.started)
+                self.jobs_done += 1
+                if not ok:
+                    self.failures += 1
                 w.job.handle._resolve(
                     MeasureResult(ok=bool(ok), value=payload if ok else None,
                                   error="" if ok else str(payload)))

@@ -79,7 +79,8 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
                             timeout_s: Optional[float] = None,
                             name: str = "network",
                             surrogates: Union[None, str,
-                                              SurrogateStore] = None
+                                              SurrogateStore] = None,
+                            remote=None
                             ) -> NetworkReport:
     """DiGamma-style GA over (cuts, per-stage hw values) at netopt's
     budget: seed a population, then tournament-select two parents,
@@ -90,7 +91,7 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
     if k_chips is not None:
         cfg = dataclasses.replace(cfg, k_chips=int(k_chips))
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "genetic", surrogates=surrogates)
+                    "genetic", surrogates=surrogates, remote=remote)
     ps = ev.pspace
     rng = np.random.default_rng(cfg.seed)
     n_evals = cfg.n_candidates + 1     # netopt's candidate count + refine

@@ -119,10 +119,14 @@ class _Evaluator:
     def __init__(self, tasks: Iterable[TuningTask], cfg: NetOptConfig,
                  records: Union[None, str, RecordLog], workers: int,
                  timeout_s: Optional[float], name: str, algo: str,
-                 surrogates: Union[None, str, SurrogateStore] = None):
+                 surrogates: Union[None, str, SurrogateStore] = None,
+                 remote=None):
         self.tasks = list(tasks)
         if not self.tasks:
             raise ValueError("network co-optimization needs >= 1 task")
+        if remote and workers:
+            raise ValueError("remote= and workers= are mutually exclusive: "
+                             "one measurement transport per run")
         self.cfg = cfg
         # Sessions build a fresh oracle per (candidate, layer), so the
         # RecordLog is the only replay path — and the refinement pass
@@ -139,6 +143,12 @@ class _Evaluator:
                         else records)
         self.workers = int(workers)
         self.timeout_s = timeout_s
+        # endpoints string/list, or an already-built RemoteExecutor the
+        # caller owns (tests tune reconnect knobs this way) — the latter
+        # is borrowed, never closed here
+        self.remote = remote
+        self._owns_executor = not (remote is not None
+                                   and hasattr(remote, "submit"))
         self.name = name
         self.algo = algo
         self.pspace = PartitionSpace(self.tasks, cfg.k_chips)
@@ -168,16 +178,26 @@ class _Evaluator:
         self.t0 = time.perf_counter()
 
     def open(self) -> None:
-        if self.workers > 0 and self.executor is None:
+        if self.executor is not None:
+            return
+        if self.workers > 0:
             # one crash-isolated pool serves every (candidate, layer)
             # measurement of the whole co-optimization
             from repro.compiler.executor import SubprocessExecutor
             self.executor = SubprocessExecutor(workers=self.workers,
                                                timeout_s=self.timeout_s)
+        elif self.remote is not None:
+            if hasattr(self.remote, "submit"):  # borrowed executor
+                self.executor = self.remote
+            else:
+                from repro.compiler.executor import RemoteExecutor
+                self.executor = RemoteExecutor(self.remote,
+                                               timeout_s=self.timeout_s)
 
     def close(self) -> None:
         if self.executor is not None:
-            self.executor.close()
+            if self._owns_executor:
+                self.executor.close()
             self.executor = None
         if self._tmp_records_dir is not None:
             shutil.rmtree(self._tmp_records_dir, ignore_errors=True)
@@ -329,7 +349,9 @@ class _Evaluator:
             surrogates=dict(self.surrogate_stats),
             partition={"k": part.k, "cuts": list(part.cuts),
                        "assignment": assignment},
-            k_chips=part.k, early_stop=dict(self.early_stop))
+            k_chips=part.k, early_stop=dict(self.early_stop),
+            executor_stats=(self.executor.stats()
+                            if self.executor is not None else {}))
 
 
 class NetworkCoOptimizer:
@@ -345,10 +367,12 @@ class NetworkCoOptimizer:
                  records: Union[None, str, RecordLog] = None,
                  workers: int = 0, timeout_s: Optional[float] = None,
                  name: str = "network",
-                 surrogates: Union[None, str, SurrogateStore] = None):
+                 surrogates: Union[None, str, SurrogateStore] = None,
+                 remote=None):
         self.cfg = cfg or NetOptConfig()
         self._ev = _Evaluator(tasks, self.cfg, records, workers, timeout_s,
-                              name, "netopt", surrogates=surrogates)
+                              name, "netopt", surrogates=surrogates,
+                              remote=remote)
         self.pspace = self._ev.pspace
         self._pool: Optional[List[HwPartition]] = None
         self.hw_gbt = GBTModel(n_rounds=self.cfg.hw_gbt_rounds,
@@ -539,14 +563,15 @@ def network_hw_frozen_tune(tasks: Iterable[TuningTask],
                            timeout_s: Optional[float] = None,
                            name: str = "network",
                            surrogates: Union[None, str,
-                                             SurrogateStore] = None
+                                             SurrogateStore] = None,
+                           remote=None
                            ) -> NetworkReport:
     """Network-scope hw-frozen baseline: the single network-default chip,
     with the co-optimizer's *entire* per-layer budget spent on software
     mapping under it (equal-measurement-budget comparison)."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "hw_frozen", surrogates=surrogates)
+                    "hw_frozen", surrogates=surrogates, remote=remote)
     try:
         ev.open()
         ev.evaluate(ev.hw.default_values(ev.tasks),
@@ -564,13 +589,14 @@ def network_random_hw_tune(tasks: Iterable[TuningTask],
                            timeout_s: Optional[float] = None,
                            name: str = "network",
                            surrogates: Union[None, str,
-                                             SurrogateStore] = None
+                                             SurrogateStore] = None,
+                           remote=None
                            ) -> NetworkReport:
     """Network-scope random-hardware baseline: uniform candidates, budget
     split evenly — ablates the GBT + CS outer search."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "random_hw", surrogates=surrogates)
+                    "random_hw", surrogates=surrogates, remote=remote)
     rng = np.random.default_rng(cfg.seed)
     n_candidates = max(min(n_candidates, ev.hw.size), 1)
     per_layer = max(cfg.total_layer_budget() // n_candidates, 1)

@@ -60,6 +60,11 @@ class NetworkReport:
     # transfer-aware early stop bookkeeping ({} = did not trigger):
     # {"round", "stable_refits", "skipped_candidates", "measurements_saved"}
     early_stop: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # final Executor.stats() snapshot of the run's measurement transport
+    # (jobs/failures/respawns; remote runs add per-endpoint reconnect and
+    # ack-to-result detail) — {} for in-process runs and old documents
+    executor_stats: Dict[str, object] = dataclasses.field(
+        default_factory=dict)
 
     # ------------------------------------------------------------- queries
     @property

@@ -21,6 +21,11 @@ A :class:`Session` runs ARCO or any baseline over *one or many*
   one task's GBT refits and MAPPO updates with another's in-flight
   compiles so all workers stay busy across tasks (analytical tasks are
   batched and cheap — they ignore ``workers``);
+* ``remote="host:port[,host:port]"`` fans the same measurements over TCP
+  worker daemons (``python -m repro.compiler.executor.worker``) instead
+  of local processes — heterogeneous fleets, jobs routed by each
+  oracle's ``WorkerSpec`` capabilities; the final ``Executor.stats()``
+  snapshot lands in ``SessionReport.executor_stats``;
 * the result is a typed :class:`SessionReport` of per-task
   :class:`~repro.compiler.report.TuneReport`\\ s.
 
@@ -61,6 +66,11 @@ class SessionReport:
     # {"store": path, "warm_sw_rows": int} — empty on sessions run
     # without a store (old documents deserialize with the default)
     surrogates: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # final Executor.stats() snapshot (jobs/failures/respawns; remote runs
+    # add per-endpoint detail) — empty for in-process sessions and for
+    # documents written before the field existed
+    executor_stats: Dict[str, object] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def single(self) -> TuneReport:
@@ -96,6 +106,7 @@ class SessionReport:
                 "budget_per_task": self.budget_per_task,
                 "wall_time_s": self.wall_time_s,
                 "surrogates": dict(self.surrogates),
+                "executor_stats": dict(self.executor_stats),
                 "reports": {n: r.to_dict() for n, r in self.reports.items()}}
 
     @staticmethod
@@ -106,7 +117,8 @@ class SessionReport:
             wall_time_s=d["wall_time_s"], algo=d["algo"],
             shared_cost_model=d["shared_cost_model"],
             budget_per_task=d["budget_per_task"],
-            surrogates=d.get("surrogates", {}))
+            surrogates=d.get("surrogates", {}),
+            executor_stats=d.get("executor_stats", {}))
 
 
 class Session:
@@ -119,6 +131,7 @@ class Session:
                  records: Union[None, str, RecordLog] = None,
                  seed: Optional[int] = None,
                  workers: int = 0, timeout_s: Optional[float] = None,
+                 remote: Union[None, str, list] = None,
                  gbt: Optional[GBTModel] = None,
                  executor=None,
                  surrogates: Union[None, str, SurrogateStore] = None,
@@ -143,11 +156,18 @@ class Session:
         self.share_cost_model = share_cost_model
         self.records = (RecordLog(records) if isinstance(records, str)
                         else records)
-        if timeout_s is not None and not workers and executor is None:
-            raise ValueError("timeout_s needs workers >= 1: in-process "
-                             "measurements cannot be preempted")
+        if remote and workers:
+            raise ValueError("remote= and workers= are mutually exclusive: "
+                             "one measurement transport per session")
+        if remote and executor is not None:
+            raise ValueError("remote= and executor= are mutually exclusive")
+        if (timeout_s is not None and not workers and not remote
+                and executor is None):
+            raise ValueError("timeout_s needs workers >= 1 or remote=: "
+                             "in-process measurements cannot be preempted")
         self.workers = workers
         self.timeout_s = timeout_s
+        self.remote = remote
         # an externally supplied cost model is shared across this session's
         # tasks AND whoever else holds it (netopt shares one software GBT
         # across every hardware candidate's session)
@@ -212,6 +232,13 @@ class Session:
             from repro.compiler.executor import SubprocessExecutor
             self._executor = SubprocessExecutor(workers=self.workers,
                                                 timeout_s=self.timeout_s)
+        elif self.remote and self._executor is None:
+            # same sharing story over TCP: one fleet connection serving
+            # every task, jobs routed to capability-compatible daemons
+            from repro.compiler.executor import RemoteExecutor
+            self._executor = RemoteExecutor(self.remote,
+                                            timeout_s=self.timeout_s)
+        executor_stats: Dict[str, object] = {}
         try:
             if self.algo == "arco":
                 reports = self._run_arco(shared_gbt)
@@ -222,6 +249,7 @@ class Session:
                 oracle.close()
             self._oracles = []
             if self._executor is not None and self._own_executor:
+                executor_stats = self._executor.stats()
                 self._executor.close()
                 self._executor = None
         for t in self.tasks:  # reports carry their task's layer weight
@@ -231,7 +259,8 @@ class Session:
                              algo=self.algo,
                              shared_cost_model=self.share_cost_model,
                              budget_per_task=self.budget,
-                             surrogates=surrogate_stats)
+                             surrogates=surrogate_stats,
+                             executor_stats=executor_stats)
 
     def _run_arco(self, shared_gbt: Optional[GBTModel]
                   ) -> Dict[str, TuneReport]:

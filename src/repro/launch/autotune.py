@@ -116,7 +116,8 @@ def compile_and_analyze(arch: str, shape_name: str,
 def search(arch: str, shape_name: str, budget: int = 14,
            seed: int = 0, out_path: str = None,
            records_path: str = None,
-           workers: int = 0, timeout_s: float = None):
+           workers: int = 0, timeout_s: float = None,
+           remote: str = None):
     """Thin adapter over the session API: one compile-oracle cell, measured
     through ``CompileOracle``.  Re-measures from scratch unless the caller
     opts into persistence with ``records_path`` (JSONL), from which a re-run
@@ -127,7 +128,10 @@ def search(arch: str, shape_name: str, budget: int = 14,
     measurement workers (each with its own jax init against the same
     pinned device count); ``timeout_s`` bounds each compile — a hung or
     crashed worker records the failure-penalty row and the pool respawns,
-    so the search never wedges on one bad configuration."""
+    so the search never wedges on one bad configuration.  ``remote=
+    "host:port[,host:port]"`` fans the same compiles over TCP worker
+    daemons instead of local processes (mutually exclusive with
+    ``workers``)."""
     from repro.compiler import Session, TuningTask
     cfg = TunerConfig(
         iteration_opt=max(budget // 4, 2), b_measure=4,
@@ -136,7 +140,8 @@ def search(arch: str, shape_name: str, budget: int = 14,
         seed=seed)
     task = TuningTask.cell(arch, shape_name, n_devices=len(jax.devices()))
     result = Session(task, tuner=cfg, budget=budget, records=records_path,
-                     workers=workers, timeout_s=timeout_s).run().single
+                     workers=workers, timeout_s=timeout_s,
+                     remote=remote).run().single
     summary = {
         "arch": arch, "shape": shape_name,
         "best_settings": result.best_settings,
@@ -147,6 +152,7 @@ def search(arch: str, shape_name: str, budget: int = 14,
         "oracle": result.oracle_stats,
         "records": records_path,
         "workers": workers,
+        "remote": remote,
     }
     if out_path:
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -169,7 +175,7 @@ def main():
     validate_worker_args(ap, args)
     s = search(args.arch, args.shape, args.budget, out_path=args.out,
                records_path=args.records, workers=args.workers,
-               timeout_s=args.timeout_s)
+               timeout_s=args.timeout_s, remote=args.remote)
     print(json.dumps(s, indent=1))
 
 

@@ -49,6 +49,13 @@ def test_tune_timeout_without_workers_errors(capsys):
     capsys.readouterr()
 
 
+def test_tune_remote_plus_workers_errors(capsys):
+    with pytest.raises(SystemExit):
+        main(["tune", "--matmul", "8x8x8", "--remote", "127.0.0.1:9999",
+              "--workers", "2"])
+    assert "mutually exclusive" in capsys.readouterr().err
+
+
 def test_netopt_smoke_and_json_roundtrip(tmp_path, capsys):
     out = tmp_path / "net.json"
     rc = main(["netopt", "--model", "resnet-18", "--max-tasks", "2",

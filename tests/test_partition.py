@@ -152,7 +152,8 @@ def test_k1_partition_reproduces_pre_refactor_golden(tasks):
         golden = json.load(f)
     _subset(golden, rep)
     added = set(rep) - set(golden)
-    assert added == {"early_stop", "hw_configs", "k_chips", "partition"}
+    assert added == {"early_stop", "executor_stats", "hw_configs",
+                     "k_chips", "partition"}
 
 
 def test_k1_warm_resume_records_are_tag_compatible(tasks, tmp_path):

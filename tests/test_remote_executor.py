@@ -1,0 +1,503 @@
+"""Remote measurement fabric — wire protocol, worker daemons, and the
+``RemoteExecutor`` driving them.
+
+Covers the frame protocol units, daemon round-trips, loopback parity with
+``SubprocessExecutor(workers=1)`` at a fixed seed, heterogeneous
+capability routing, and the fault semantics the subsystem promises: a
+killed daemon mid-batch yields penalty rows while the session completes
+and warm-resumes; a restarted daemon rejoins via bounded
+reconnect-with-backoff; a hung measurement times out from its
+started-ack.  In-process daemons (``WorkerDaemon.start()``) keep most of
+this fast; one test goes through the real ``python -m`` CLI via
+``spawn_daemon``.
+"""
+import dataclasses
+import json
+import threading
+import time
+
+import pytest
+
+from repro.compiler.executor import (RemoteExecutor, SerialExecutor,
+                                     SubprocessExecutor, WorkerDaemon,
+                                     WorkerSpec, parse_endpoints,
+                                     spawn_daemon)
+from repro.compiler.executor.stub import make_stub, stub_latency
+from repro.compiler.executor.wire import (PROTOCOL_VERSION, FrameBuffer,
+                                          ProtocolError, WorkerCapabilities,
+                                          device_count_pin, encode_frame,
+                                          spec_compatible)
+from repro.compiler.oracle import Oracle, SettingsOracle
+from repro.compiler.session import Session, SessionReport
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import DesignSpace
+from repro.core.shard_space import ShardSpace
+from repro.core.tuner import TunerConfig
+
+STUB = "repro.compiler.executor.stub:make_stub"
+STUB_SPEC = WorkerSpec(factory=STUB)
+HANG_COND = {"sequence_parallel": True}  # knob 6 -> SP on
+
+
+@pytest.fixture(scope="module")
+def space():
+    return ShardSpace.for_cell("qwen2-1.5b", "train_4k", None, n_devices=256)
+
+
+def _fast_executor(endpoints, **kw):
+    """RemoteExecutor with test-speed fault knobs."""
+    kw.setdefault("heartbeat_s", 0.1)
+    kw.setdefault("heartbeat_timeout_s", 1.0)
+    kw.setdefault("reconnect_backoff_s", 0.05)
+    kw.setdefault("max_backoff_s", 0.2)
+    kw.setdefault("startup_grace_s", 5.0)
+    return RemoteExecutor(endpoints, **kw)
+
+
+# ------------------------------------------------------------ wire protocol
+
+def test_frame_roundtrip_survives_arbitrary_chunking():
+    msgs = [{"type": "job", "job_id": 7, "settings": {"a": 1}},
+            {"type": "heartbeat"},
+            {"type": "result", "job_id": 7, "ok": True, "value": 0.25}]
+    blob = b"".join(encode_frame(m) for m in msgs)
+    for chunk in (1, 2, 3, len(blob)):  # byte-dribble through re-framing
+        buf = FrameBuffer()
+        out = []
+        for i in range(0, len(blob), chunk):
+            out.extend(buf.feed(blob[i:i + chunk]))
+        assert out == msgs
+
+
+def test_frame_buffer_rejects_garbage():
+    buf = FrameBuffer()
+    with pytest.raises(ProtocolError):  # announced length beyond the cap
+        buf.feed(b"\xff\xff\xff\xff")
+    bad = encode_frame({"type": "x"})[:4] + b'{"type": brok'
+    with pytest.raises(ProtocolError):
+        FrameBuffer().feed(bad[:4] + b"x" * (len(bad) - 4))
+
+
+def test_parse_endpoints_forms():
+    assert parse_endpoints("h1:10,h2:11") == [("h1", 10), ("h2", 11)]
+    assert parse_endpoints(["a:1", "b:2"]) == [("a", 1), ("b", 2)]
+    assert parse_endpoints(":5000") == [("127.0.0.1", 5000)]
+    assert parse_endpoints("[::1]:9") == [("::1", 9)]
+    with pytest.raises(ValueError):
+        parse_endpoints("nocolon")
+    with pytest.raises(ValueError):
+        parse_endpoints("")
+
+
+def test_capabilities_version_mismatch_is_loud():
+    caps = WorkerCapabilities(slots=2, backend="cpu", device_count=4)
+    wire = caps.to_wire()
+    assert WorkerCapabilities.from_wire(wire).device_count == 4
+    wire["version"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError, match="version"):
+        WorkerCapabilities.from_wire(wire)
+
+
+def test_spec_compatibility_routes_on_device_pin():
+    pin4 = WorkerSpec(factory=STUB, env={
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    assert device_count_pin(pin4.env) == 4
+    assert spec_compatible(pin4, WorkerCapabilities(device_count=4))
+    assert not spec_compatible(pin4, WorkerCapabilities(device_count=2))
+    # a wildcard daemon applies the pin itself at factory resolution
+    assert spec_compatible(pin4, WorkerCapabilities(device_count=None))
+    # spec without a pin runs anywhere
+    assert spec_compatible(STUB_SPEC, WorkerCapabilities(device_count=8))
+    assert spec_compatible(None, WorkerCapabilities(device_count=8))
+
+
+# ----------------------------------------------------- daemon round-trips
+
+def test_remote_executor_round_trip_and_stats():
+    daemon = WorkerDaemon(slots=2).start()
+    try:
+        ex = RemoteExecutor(daemon.endpoint)
+        settings = [{"model_axis": 1 << i} for i in range(6)]
+        handles = [ex.submit("t", s, spec=STUB_SPEC) for s in settings]
+        ex.drain(handles)
+        for s, h in zip(settings, handles):
+            assert h.result().ok
+            assert h.result().value == stub_latency(s)
+        st = ex.stats()
+        assert st["kind"] == "remote" and st["jobs"] == 6
+        assert st["failures"] == 0 and st["workers_alive"] == 2
+        (ep_stats,) = st["endpoints"].values()
+        assert ep_stats["jobs"] == 6 and ep_stats["reconnects"] == 0
+        assert ep_stats["mean_ack_to_result_s"] >= 0.0
+        ex.close()
+    finally:
+        daemon.stop()
+
+
+def test_measure_fn_exception_is_failure_not_crash():
+    daemon = WorkerDaemon().start()
+    try:
+        ex = _fast_executor(daemon.endpoint)
+        bad = ex.submit("t", {"fsdp": True},
+                        spec=WorkerSpec(factory=STUB,
+                                        kwargs={"fail_when": {"fsdp": True}}))
+        good = ex.submit("t", {"model_axis": 2}, spec=STUB_SPEC)
+        ex.drain([bad, good])
+        assert not bad.result().ok
+        assert "stub measurement failed" in bad.result().error
+        assert good.result().ok  # the daemon survived the raise
+        assert ex.stats()["reconnects"] == 0
+        ex.close()
+    finally:
+        daemon.stop()
+
+
+def test_spec_without_factory_fails_fast():
+    daemon = WorkerDaemon().start()
+    try:
+        ex = RemoteExecutor(daemon.endpoint)
+        h = ex.submit("t", {"x": 1})  # no spec: nothing to rebuild remotely
+        assert not h.result().ok and "NoWorkerSpec" in h.result().error
+        ex.close()
+    finally:
+        daemon.stop()
+
+
+def test_unreachable_fleet_raises_at_construction():
+    with pytest.raises(ConnectionError, match="no worker daemon reachable"):
+        RemoteExecutor("127.0.0.1:1", connect_timeout_s=0.5)
+    with pytest.raises(ValueError, match="duplicate"):
+        RemoteExecutor("h:1,h:1")
+
+
+# ------------------------------------------------- heterogeneous routing
+
+def test_heterogeneous_routing_by_device_count():
+    d2 = WorkerDaemon(slots=1, device_count=2).start()
+    d4 = WorkerDaemon(slots=1, device_count=4).start()
+    try:
+        ex = RemoteExecutor([d2.endpoint, d4.endpoint])
+        pin = lambda n: WorkerSpec(factory=STUB, env={
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}"})
+        h2 = [ex.submit("t", {"i": i, "model_axis": 2}, spec=pin(2))
+              for i in range(3)]
+        h4 = [ex.submit("t", {"i": i, "model_axis": 4}, spec=pin(4))
+              for i in range(3)]
+        ex.drain(h2 + h4)
+        assert all(h.result().ok for h in h2 + h4)
+        st = ex.stats()["endpoints"]
+        assert st[d2.endpoint]["jobs"] == 3  # pinned jobs never cross over
+        assert st[d4.endpoint]["jobs"] == 3
+        # a pin no daemon serves fails fast instead of wedging the queue
+        h8 = ex.submit("t", {"model_axis": 8}, spec=pin(8))
+        assert not h8.result().ok
+        assert "NoCompatibleWorker" in h8.result().error
+        ex.close()
+    finally:
+        d2.stop()
+        d4.stop()
+
+
+# -------------------------------------------------------- loopback parity
+
+def _remote_task(space, name, endpoint=None, subprocess_workers=0):
+    """Stub-oracle task backed by a remote daemon, a subprocess pool, or
+    the in-process serial path — same measurements everywhere."""
+    def factory(task, records, workers=0, timeout_s=None):
+        if endpoint is not None:
+            ex = RemoteExecutor(endpoint)
+        elif subprocess_workers:
+            ex = SubprocessExecutor(WorkerSpec(factory=STUB),
+                                    workers=subprocess_workers)
+        else:
+            return SettingsOracle(space, fn=make_stub(), task=task.name,
+                                  records=records)
+        return SettingsOracle(space, fn=None, executor=ex,
+                              own_executor=True, task=task.name,
+                              records=records, worker_spec=STUB_SPEC)
+    return TuningTask(name=name, space=space, oracle_factory=factory)
+
+
+def test_loopback_parity_with_subprocess_pool(space):
+    """The acceptance bar: one loopback daemon at a fixed seed produces a
+    session report identical to ``SubprocessExecutor(workers=1)`` —
+    same configs, same measurements, same history, byte-identical
+    serialized reports once wall-time and transport stats (which cannot
+    match by construction) are masked."""
+    cfg = TunerConfig(iteration_opt=2, b_measure=6, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=8, seed=3)
+    daemon = WorkerDaemon().start()
+    try:
+        docs = {}
+        for label, task in (
+                ("remote", _remote_task(space, "det",
+                                        endpoint=daemon.endpoint)),
+                ("subprocess", _remote_task(space, "det",
+                                            subprocess_workers=1))):
+            doc = Session(task, tuner=cfg, budget=12).run().to_dict()
+            doc["wall_time_s"] = 0.0
+            doc["executor_stats"] = {}
+            for rep in doc["reports"].values():
+                rep["wall_time_s"] = 0.0
+                rep["history"] = [[n, lat, 0.0]
+                                  for n, lat, _ in rep["history"]]
+            docs[label] = json.dumps(doc, sort_keys=True)
+        assert docs["remote"] == docs["subprocess"]
+    finally:
+        daemon.stop()
+
+
+def test_session_remote_kwarg_runs_and_records_stats(space):
+    """`Session(remote=...)` builds the fleet executor itself and lands
+    the final stats() snapshot in the report (round-trips via JSON)."""
+    daemon = WorkerDaemon(slots=2).start()
+    try:
+        cfg = TunerConfig(iteration_opt=2, b_measure=4, episodes_per_iter=2,
+                          mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                          gbt_rounds=8, seed=0)
+
+        def factory(task, records, workers=0, timeout_s=None, executor=None):
+            return SettingsOracle(space, fn=None, executor=executor,
+                                  task=task.name, records=records,
+                                  worker_spec=STUB_SPEC)
+
+        task = TuningTask(name="rk", space=space, oracle_factory=factory)
+        sr = Session(task, tuner=cfg, budget=8,
+                     remote=daemon.endpoint).run()
+        assert sr.executor_stats["kind"] == "remote"
+        assert sr.executor_stats["jobs"] >= 8
+        assert daemon.endpoint in sr.executor_stats["endpoints"]
+        rt = SessionReport.from_dict(json.loads(json.dumps(sr.to_dict())))
+        assert rt.executor_stats["jobs"] == sr.executor_stats["jobs"]
+    finally:
+        daemon.stop()
+
+
+def test_session_rejects_remote_plus_workers(space):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Session(_remote_task(space, "x"), remote="h:1", workers=2)
+
+
+# --------------------------------------------------------- fault semantics
+
+def test_daemon_killed_mid_batch_fails_inflight_then_fleet_down():
+    daemon = WorkerDaemon(slots=2).start()
+    ex = _fast_executor(daemon.endpoint, max_reconnects=2)
+    slow = WorkerSpec(factory=STUB, kwargs={"delay_s": 30.0})
+    handles = [ex.submit("t", {"i": i}, spec=slow) for i in range(2)]
+    time.sleep(0.3)  # let both jobs start on the daemon
+    daemon.stop()  # connection dies mid-measurement
+    extra = ex.submit("t", {"i": 9}, spec=slow)  # queued, never served
+    ex.drain(handles + [extra])
+    for h in handles:
+        assert not h.result().ok and "WorkerCrash" in h.result().error
+    assert not extra.result().ok
+    assert "FleetDown" in extra.result().error
+    assert ex.stats()["failures"] >= 2
+    ex.close()
+
+
+def test_restarted_daemon_rejoins_and_jobs_flow():
+    daemon = WorkerDaemon().start()
+    port = daemon.address[1]
+    ex = _fast_executor(daemon.endpoint, max_reconnects=50)
+    ok = ex.submit("t", {"model_axis": 2}, spec=STUB_SPEC)
+    assert ok.result().ok
+    daemon.stop()
+    deadline = time.monotonic() + 10.0  # wait for the EOF to be noticed —
+    while ex.stats()["endpoints"][ex._eps[0].label]["connected"]:
+        assert time.monotonic() < deadline  # else a fresh job could be
+        ex.poll()                           # dispatched onto the corpse
+        time.sleep(0.01)
+    daemon2 = WorkerDaemon(port=port).start()  # same endpoint, new pid
+    try:
+        again = ex.submit("t", {"model_axis": 4}, spec=STUB_SPEC)
+        assert again.result().ok  # served by the restarted daemon
+        st = ex.stats()
+        assert st["reconnects"] >= 1
+        assert st["endpoints"][ex._eps[0].label]["reconnects"] >= 1
+        ex.close()
+    finally:
+        daemon2.stop()
+
+
+def test_timeout_counted_from_started_ack_drops_connection():
+    daemon = WorkerDaemon().start()
+    try:
+        ex = _fast_executor(daemon.endpoint, timeout_s=0.4,
+                            startup_grace_s=5.0, max_reconnects=50)
+        hang = WorkerSpec(factory=STUB, kwargs={"hang_when": HANG_COND})
+        h = ex.submit("t", {"sequence_parallel": True}, spec=hang)
+        t0 = time.monotonic()
+        res = h.result()
+        assert not res.ok and "TimeoutError" in res.error
+        assert time.monotonic() - t0 < 10.0
+        # the dropped connection re-dials; fresh jobs flow again
+        ok = ex.submit("t", {"model_axis": 2}, spec=hang)
+        assert ok.result().ok
+        assert ex.stats()["reconnects"] >= 1
+        ex.close()
+    finally:
+        daemon.stop()
+
+
+def test_session_records_penalties_and_warm_resumes_after_crash(
+        space, tmp_path):
+    """Kill the fleet's only daemon mid-session: failed measurements land
+    as penalty rows, the session still completes, and a re-run against a
+    healthy daemon replays every recorded row before paying for new
+    ones."""
+    path = str(tmp_path / "crash.jsonl")
+    cfg = TunerConfig(iteration_opt=2, b_measure=4, episodes_per_iter=2,
+                      mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                      gbt_rounds=8, seed=1)
+    daemon = WorkerDaemon(slots=2).start()
+    killer = threading.Timer(0.5, daemon.stop)
+
+    def factory(task, records, workers=0, timeout_s=None):
+        ex = _fast_executor(daemon.endpoint, max_reconnects=2)
+        return SettingsOracle(space, fn=None, executor=ex,
+                              own_executor=True, task=task.name,
+                              records=records,
+                              worker_spec=WorkerSpec(
+                                  factory=STUB,
+                                  kwargs={"delay_s": 0.2}))
+
+    task = TuningTask(name="crashy", space=space, oracle_factory=factory)
+    killer.start()
+    try:
+        rep = Session(task, tuner=cfg, budget=12, records=path).run().single
+    finally:
+        killer.cancel()
+        daemon.stop()
+    assert rep.n_measurements == 12  # completed despite the dead fleet
+    assert rep.oracle_stats["failures"] >= 1  # crash -> penalty rows
+    assert any(lat == Oracle.penalty_latency
+               for _, lat in rep.measurements)
+    # warm resume: healthy daemon, same records — replays, no re-payment
+    daemon2 = WorkerDaemon(slots=2).start()
+
+    def factory2(task, records, workers=0, timeout_s=None):
+        ex = _fast_executor(daemon2.endpoint)
+        return SettingsOracle(space, fn=None, executor=ex,
+                              own_executor=True, task=task.name,
+                              records=records, worker_spec=STUB_SPEC)
+
+    try:
+        rep2 = Session(dataclasses.replace(task, oracle_factory=factory2),
+                       tuner=cfg, budget=12, records=path).run().single
+    finally:
+        daemon2.stop()
+    assert rep2.oracle_stats["misses"] == 0  # fully warm, incl. penalties
+    assert rep2.n_measurements == rep.n_measurements
+
+
+# -------------------------------------------- netopt over a daemon fleet
+
+def test_netopt_over_two_daemons_survives_crash_and_restart():
+    """The issue's netopt acceptance bar: a co-optimization over two
+    daemons rides out one daemon dying mid-run (penalty rows recorded,
+    reconnect counted once it returns) and still emits a valid
+    JSON-round-trippable NetworkReport."""
+    from repro.compiler.netopt import NetOptConfig, NetworkCoOptimizer
+    from repro.compiler.netopt.report import NetworkReport
+
+    wl_a = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
+    wl_b = dict(b=1, h=28, w=28, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+    tiny = TunerConfig(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                       mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                       gbt_rounds=10)
+    slow_spec = WorkerSpec(factory=STUB, kwargs={"delay_s": 0.05})
+
+    def factory(task, records, workers=0, timeout_s=None, executor=None):
+        return SettingsOracle(task.space, fn=None, executor=executor,
+                              task=task.name, records=records,
+                              worker_spec=slow_spec)
+
+    tasks = [TuningTask(name=n, space=DesignSpace.for_conv2d(wl),
+                        oracle_factory=factory, multiplicity=m)
+             for n, wl, m in (("c1", wl_a, 2), ("c2", wl_b, 1))]
+    d1, d2 = WorkerDaemon(slots=1).start(), WorkerDaemon(slots=1).start()
+    port2 = d2.address[1]
+    ex = _fast_executor([d1.endpoint, d2.endpoint], max_reconnects=200)
+    stopper = {}
+
+    def chaos():  # kill d2 once it holds work, restart it shortly after
+        label = d2.endpoint
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            st = ex.stats()["endpoints"].get(label)
+            if st and st["in_flight"] > 0:
+                d2.stop()
+                time.sleep(0.3)
+                stopper["d2b"] = WorkerDaemon(port=port2).start()
+                return
+            time.sleep(0.01)
+
+    th = threading.Thread(target=chaos, daemon=True)
+    th.start()
+    cfg = NetOptConfig(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                       layer_budget=6, refine_budget=6, tuner=tiny)
+    try:
+        rep = NetworkCoOptimizer(tasks, cfg, remote=ex,
+                                 name="remote-net").run()
+    finally:
+        th.join(timeout=30)
+        ex.close()
+        d1.stop()
+        d2.stop()
+        if "d2b" in stopper:
+            stopper["d2b"].stop()
+    es = rep.executor_stats
+    assert es["kind"] == "remote" and es["jobs"] > 0
+    assert es["failures"] >= 1          # the crash cost in-flight jobs...
+    assert es["reconnects"] >= 1        # ...and the restart rejoined
+    assert rep.network_latency > 0 and rep.verify_shared_hardware()
+    doc = json.loads(json.dumps(rep.to_dict()))
+    rt = NetworkReport.from_dict(doc)
+    assert rt.network_latency == rep.network_latency
+    assert rt.executor_stats["reconnects"] == es["reconnects"]
+
+
+# ----------------------------------------------------- protocol-wide stats
+
+def test_stats_is_uniform_across_executors(space):
+    serial = SerialExecutor(fn=make_stub())
+    keys = {"kind", "workers_alive", "respawns", "queued", "running",
+            "max_inflight", "jobs", "failures"}
+    assert keys <= set(serial.stats())
+    assert serial.stats()["kind"] == "serial"
+    assert all(v == 0 for k, v in serial.stats().items() if k != "kind")
+    with SubprocessExecutor(WorkerSpec(factory=STUB), workers=1) as pool:
+        h = pool.submit("t", {"model_axis": 2})
+        assert h.result().ok
+        st = pool.stats()
+        assert keys <= set(st)
+        assert st["kind"] == "subprocess" and st["jobs"] == 1
+    daemon = WorkerDaemon().start()
+    try:
+        ex = RemoteExecutor(daemon.endpoint)
+        assert keys <= set(ex.stats())
+        ex.close()
+    finally:
+        daemon.stop()
+
+
+# --------------------------------------------------------------- CLI path
+
+def test_spawned_daemon_cli_serves_jobs():
+    """End-to-end through the real entry point: ``python -m
+    repro.compiler.executor.worker`` (via spawn_daemon's --port-file
+    discovery), one job round-trip, clean termination."""
+    proc, endpoint = spawn_daemon(slots=1)
+    try:
+        ex = RemoteExecutor(endpoint)
+        h = ex.submit("t", {"model_axis": 4}, spec=STUB_SPEC)
+        assert h.result().ok
+        assert h.result().value == stub_latency({"model_axis": 4})
+        ex.close()
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)

@@ -29,7 +29,10 @@ REQUIRED = (
     "repro.compiler.executor",
     "repro.compiler.executor.base",
     "repro.compiler.executor.pool",
+    "repro.compiler.executor.remote",
     "repro.compiler.executor.stub",
+    "repro.compiler.executor.wire",
+    "repro.compiler.executor.worker",
     "repro.compiler.netopt",
     "repro.compiler.netopt.genetic",
     "repro.compiler.netopt.hwspace",
