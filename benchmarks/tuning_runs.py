@@ -28,13 +28,18 @@ import subprocess
 import time
 from typing import Dict, Optional
 
+from repro import obs
 from repro.compiler import Session, TuningTask
 from repro.core import mappo
 from repro.core.task import Task, conv_tasks
 from repro.core.tuner import TunerConfig
 from repro.models import cnn
 
-BENCH_SCHEMA = "repro-bench/1"
+BENCH_SCHEMA = "repro-bench/2"
+# /2 additionally allows ONE nested block — metrics["phase_times"], a
+# name -> finite-seconds dict from the run's tracer (repro.obs); /1 docs
+# (strictly flat) are still accepted by validate_bench_doc.
+BENCH_SCHEMAS = ("repro-bench/1", BENCH_SCHEMA)
 ART = os.environ.get("REPRO_ART", "artifacts/tuning")
 PAPER = os.environ.get("REPRO_PAPER", "0") == "1"
 # bump when the per-run row schema changes (2: TuneReport.to_dict rows,
@@ -151,16 +156,28 @@ def git_revision() -> str:
         return "unknown"
 
 
+def _check_metric(k, v, where: str) -> None:
+    if not isinstance(k, str):
+        raise ValueError(f"{where} name {k!r} is not a str")
+    if isinstance(v, bool) or not isinstance(v, numbers.Real) \
+            or not math.isfinite(float(v)):
+        raise ValueError(f"{where} {k!r} must be a finite float, "
+                         f"got {v!r}")
+
+
 def validate_bench_doc(doc: Dict) -> Dict:
-    """Assert ``doc`` is a well-formed ``repro-bench/1`` artifact; returns
-    it.  The contract trajectory tooling diffs across commits: flat
-    finite-float metrics (structure goes in metric *names*), a JSON-object
-    config, a git revision, a creation timestamp."""
+    """Assert ``doc`` is a well-formed ``repro-bench/1`` or ``/2``
+    artifact; returns it.  The contract trajectory tooling diffs across
+    commits: flat finite-float metrics (structure goes in metric
+    *names*), a JSON-object config, a git revision, a creation
+    timestamp.  ``/2`` additionally permits exactly one nested block —
+    ``metrics["phase_times"]``, itself a flat name -> finite-seconds
+    dict (the run's span-level time attribution)."""
     if not isinstance(doc, dict):
         raise ValueError(f"bench doc must be a dict, got {type(doc)}")
-    if doc.get("schema") != BENCH_SCHEMA:
-        raise ValueError(f"bench schema {doc.get('schema')!r} != "
-                         f"{BENCH_SCHEMA!r}")
+    if doc.get("schema") not in BENCH_SCHEMAS:
+        raise ValueError(f"bench schema {doc.get('schema')!r} not in "
+                         f"{BENCH_SCHEMAS!r}")
     if not doc.get("bench") or not isinstance(doc["bench"], str):
         raise ValueError("bench doc needs a nonempty str 'bench' name")
     if not isinstance(doc.get("created_unix"), numbers.Real):
@@ -173,12 +190,12 @@ def validate_bench_doc(doc: Dict) -> Dict:
     if not isinstance(metrics, dict) or not metrics:
         raise ValueError("bench doc needs a nonempty 'metrics' dict")
     for k, v in metrics.items():
-        if not isinstance(k, str):
-            raise ValueError(f"metric name {k!r} is not a str")
-        if isinstance(v, bool) or not isinstance(v, numbers.Real) \
-                or not math.isfinite(float(v)):
-            raise ValueError(f"metric {k!r} must be a finite float, "
-                             f"got {v!r}")
+        if (k == "phase_times" and doc["schema"] == BENCH_SCHEMA
+                and isinstance(v, dict)):
+            for pk, pv in v.items():
+                _check_metric(pk, pv, "phase_times entry")
+            continue
+        _check_metric(k, v, "metric")
     return doc
 
 
@@ -186,19 +203,25 @@ def write_bench_artifact(path: str, bench: str, metrics: Dict[str, float],
                          config: Dict) -> Dict:
     """The standardized ``BENCH_*.json`` artifact: one flat document of
 
-        {"schema": "repro-bench/1", "bench": <name>, "created_unix": <ts>,
+        {"schema": "repro-bench/2", "bench": <name>, "created_unix": <ts>,
          "git_rev": <short rev[-dirty]>, "config": {...what was run...},
-         "metrics": {name: float, ...}}
+         "metrics": {name: float, ..., "phase_times": {name: secs, ...}}}
 
     ``metrics`` is a flat name->float dict so trajectory tooling can diff
     runs across commits without schema knowledge; put structure in names
-    (``coopt_network_latency_s``), not nesting.  The document is validated
-    (:func:`validate_bench_doc`) before anything touches disk — a NaN
-    metric or nested dict fails the run, not the downstream diff."""
+    (``coopt_network_latency_s``), not nesting.  The ONE sanctioned
+    nested block is ``phase_times`` — span-level wall-clock attribution
+    from the run's tracer (:mod:`repro.obs`), itself flat name->seconds.
+    The document is validated (:func:`validate_bench_doc`) before
+    anything touches disk — a NaN metric or unsanctioned nesting fails
+    the run, not the downstream diff."""
     doc = {"schema": BENCH_SCHEMA, "bench": bench,
            "created_unix": time.time(), "git_rev": git_revision(),
            "config": config,
-           "metrics": {k: float(v) for k, v in metrics.items()}}
+           "metrics": {k: ({pk: float(pv) for pk, pv in v.items()}
+                           if k == "phase_times" and isinstance(v, dict)
+                           else float(v))
+                       for k, v in metrics.items()}}
     validate_bench_doc(doc)
     d = os.path.dirname(path)
     if d:
@@ -206,7 +229,8 @@ def write_bench_artifact(path: str, bench: str, metrics: Dict[str, float],
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {path}: " + " ".join(f"{k}={v:.3e}"
-                                       for k, v in doc["metrics"].items()),
+                                       for k, v in doc["metrics"].items()
+                                       if not isinstance(v, dict)),
           flush=True)
     return doc
 
@@ -223,16 +247,19 @@ def netopt_bench(workers: int = 0, timeout_s: Optional[float] = None,
                         refine_budget=refine_budget, tuner=tuner_config())
     tasks = TuningTask.conv_tasks("resnet-18")
     t0 = time.perf_counter()
-    coopt = NetworkCoOptimizer(tasks, ncfg, workers=workers,
-                               timeout_s=timeout_s, remote=remote,
-                               name="resnet-18").run()
-    frozen = network_hw_frozen_tune(tasks, ncfg, workers=workers,
-                                    timeout_s=timeout_s, remote=remote,
-                                    name="resnet-18")
-    fantasy = Session(tasks, tuner=ncfg.tuner,
-                      budget=ncfg.total_layer_budget(), workers=workers,
-                      timeout_s=timeout_s, remote=remote).run()
+    tracer = obs.Tracer(name="netopt_bench")
+    with obs.use(tracer):  # every arm's spans land in one phase_times
+        coopt = NetworkCoOptimizer(tasks, ncfg, workers=workers,
+                                   timeout_s=timeout_s, remote=remote,
+                                   name="resnet-18").run()
+        frozen = network_hw_frozen_tune(tasks, ncfg, workers=workers,
+                                        timeout_s=timeout_s, remote=remote,
+                                        name="resnet-18")
+        fantasy = Session(tasks, tuner=ncfg.tuner,
+                          budget=ncfg.total_layer_budget(), workers=workers,
+                          timeout_s=timeout_s, remote=remote).run()
     return {
+        "phase_times": tracer.phase_times(),
         "coopt_network_latency_s": coopt.network_latency,
         "hw_frozen_network_latency_s": frozen.network_latency,
         "fantasy_network_latency_s": fantasy.network_latency(),
@@ -271,16 +298,19 @@ def hetero_bench(workers: int = 0, timeout_s: Optional[float] = None,
                 layer_budget=layer_budget, refine_budget=refine_budget,
                 tuner=hetero_tuner_config())
     t0 = time.perf_counter()
-    k1 = NetworkCoOptimizer(tasks, NetOptConfig(**base), workers=workers,
-                            timeout_s=timeout_s, remote=remote,
-                            name="resnet-bert").run()
-    k2 = NetworkCoOptimizer(tasks, NetOptConfig(k_chips=2, **base),
-                            workers=workers, timeout_s=timeout_s,
-                            remote=remote, name="resnet-bert").run()
-    ga = network_genetic_hw_tune(tasks, NetOptConfig(k_chips=2, **base),
-                                 workers=workers, timeout_s=timeout_s,
-                                 remote=remote, name="resnet-bert")
+    tracer = obs.Tracer(name="hetero_bench")
+    with obs.use(tracer):
+        k1 = NetworkCoOptimizer(tasks, NetOptConfig(**base), workers=workers,
+                                timeout_s=timeout_s, remote=remote,
+                                name="resnet-bert").run()
+        k2 = NetworkCoOptimizer(tasks, NetOptConfig(k_chips=2, **base),
+                                workers=workers, timeout_s=timeout_s,
+                                remote=remote, name="resnet-bert").run()
+        ga = network_genetic_hw_tune(tasks, NetOptConfig(k_chips=2, **base),
+                                     workers=workers, timeout_s=timeout_s,
+                                     remote=remote, name="resnet-bert")
     return {
+        "phase_times": tracer.phase_times(),
         "k1_network_latency_s": k1.network_latency,
         "k2_network_latency_s": k2.network_latency,
         "genetic_network_latency_s": ga.network_latency,

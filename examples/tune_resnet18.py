@@ -20,7 +20,9 @@ it, compared at equal measurement budget against
     PYTHONPATH=src python examples/tune_resnet18.py --coopt [--layer-budget 16]
 """
 import argparse
+import contextlib
 
+from repro import obs
 from repro.compiler import Session, TuningTask
 from repro.core import mappo
 from repro.core.tuner import TunerConfig
@@ -135,13 +137,24 @@ def main():
     print(f"ResNet-18: {sum(t.multiplicity for t in tasks)} conv layers, "
           f"{len(tasks)} unique tuning tasks\n")
 
-    if args.coopt:
-        coopt_comparison(args, cfg, tasks)
-    else:
-        if args.warm_from or args.save_surrogates:
-            raise SystemExit("--warm-from/--save-surrogates apply to the "
-                             "co-optimizer; add --coopt")
-        software_only_comparison(args, cfg, tasks)
+    # One tracer spanning every method's session: sub-runs without their
+    # own trace= inherit the ambient tracer, so the whole comparison lands
+    # in a single merged timeline.
+    tracer = obs.Tracer(name="tune-resnet18") if args.trace else None
+    scope = obs.use(tracer) if tracer else contextlib.nullcontext()
+    try:
+        with scope:
+            if args.coopt:
+                coopt_comparison(args, cfg, tasks)
+            else:
+                if args.warm_from or args.save_surrogates:
+                    raise SystemExit("--warm-from/--save-surrogates apply to "
+                                     "the co-optimizer; add --coopt")
+                software_only_comparison(args, cfg, tasks)
+    finally:
+        if tracer:
+            tracer.save(args.trace)
+            print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -128,7 +128,7 @@ def _run_tune(args) -> int:
                       share_cost_model=not args.independent,
                       records=args.records, seed=args.seed,
                       workers=args.workers, timeout_s=args.timeout_s,
-                      remote=args.remote,
+                      remote=args.remote, trace=args.trace,
                       surrogates=store, network=label)
     summary = session.run().to_dict()
     if args.compact and store is not None:
@@ -160,7 +160,7 @@ def _run_netopt(args) -> int:
     store = store_from_args(args)
     kw = dict(records=args.records, workers=args.workers,
               timeout_s=args.timeout_s, remote=args.remote, name=name,
-              surrogates=store)
+              surrogates=store, trace=args.trace)
     if args.baseline == "hw-frozen":
         rep = network_hw_frozen_tune(tasks, cfg, **kw)
     elif args.baseline == "random-hw":

@@ -15,6 +15,8 @@ import dataclasses
 import importlib
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class WorkerSpec:
@@ -84,6 +86,12 @@ def add_worker_args(parser) -> None:
         help="measure on remote worker daemons (python -m "
              "repro.compiler.executor.worker --listen HOST:PORT) instead "
              "of a local pool; mutually exclusive with --workers")
+    parser.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="write a span-level trace of the run: Chrome-trace JSON "
+             "(load in Perfetto / chrome://tracing; summarize with "
+             "tools/trace_summary.py), or raw JSONL if PATH ends in "
+             ".jsonl")
 
 
 def validate_worker_args(parser, args) -> None:
@@ -212,7 +220,9 @@ class SerialExecutor(Executor):
             if fn is None:
                 raise ValueError("no measure fn: executor has no default "
                                  "and the job carried no spec")
-            handle._resolve(MeasureResult(ok=True, value=fn(settings)))
+            with obs.current().span("measure", cat="measure", task=task):
+                value = fn(settings)
+            handle._resolve(MeasureResult(ok=True, value=value))
         except Exception as e:  # infeasible configuration
             handle._resolve(MeasureResult(
                 ok=False, error=f"{type(e).__name__}: {e}"))

@@ -30,6 +30,7 @@ import traceback
 from multiprocessing import connection, get_context
 from typing import Deque, Dict, List, Optional
 
+from repro import obs
 from repro.compiler.executor.base import (Executor, MeasureHandle,
                                           MeasureResult, WorkerSpec,
                                           resolve_factory)
@@ -117,12 +118,13 @@ def adaptive_inflight(workers: int, ema_duration_s: Optional[float],
 
 
 class _Job:
-    __slots__ = ("handle", "deadline", "started")
+    __slots__ = ("handle", "deadline", "started", "dispatched")
 
     def __init__(self, handle: MeasureHandle):
         self.handle = handle
         self.deadline: Optional[float] = None  # set at dispatch time
         self.started: Optional[float] = None   # set at the worker's ack
+        self.dispatched: Optional[float] = None  # sent to a worker
 
 
 class _Worker:
@@ -297,6 +299,7 @@ class SubprocessExecutor(Executor):
                 # the _STARTED ack re-arms it to the pure timeout_s
                 job.deadline = (time.monotonic() + self.timeout_s
                                 + self.startup_grace_s)
+            job.dispatched = time.monotonic()
             try:
                 w.conn.send((job.handle.job_id, job.handle.spec,
                              job.handle.task, job.handle.settings))
@@ -304,6 +307,7 @@ class SubprocessExecutor(Executor):
                 self._reap(w, "WorkerCrash: pipe closed before dispatch")
                 self._queue.appendleft(job)
                 job.deadline = None
+                job.dispatched = None
                 continue
             w.job = job
 
@@ -368,6 +372,14 @@ class SubprocessExecutor(Executor):
                         w.job.started = time.monotonic()
                         if w.job.deadline is not None:
                             w.job.deadline = w.job.started + self.timeout_s
+                        if w.job.dispatched is not None:
+                            # dispatch->ack: worker startup + queue latency
+                            obs.current().add_span_mono(
+                                "dispatch", cat="executor",
+                                start_mono_s=w.job.dispatched,
+                                dur_s=w.job.started - w.job.dispatched,
+                                tid=f"pool-w{w.proc.pid}",
+                                args={"task": w.job.handle.task})
                     continue
                 job_id, ok, payload = msg
                 if job_id != w.job.handle.job_id:
@@ -376,7 +388,13 @@ class SubprocessExecutor(Executor):
                     # timeout), but guard against protocol drift
                     continue
                 if w.job.started is not None:  # feed the adaptive bound
-                    self._observe_duration(time.monotonic() - w.job.started)
+                    dur = time.monotonic() - w.job.started
+                    self._observe_duration(dur)
+                    obs.current().add_span_mono(
+                        "measure", cat="measure",
+                        start_mono_s=w.job.started, dur_s=dur,
+                        tid=f"pool-w{w.proc.pid}",
+                        args={"task": w.job.handle.task})
                 self.jobs_done += 1
                 if not ok:
                     self.failures += 1

@@ -46,6 +46,7 @@ import socket
 import time
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
+from repro import obs
 from repro.compiler.executor.base import (Executor, MeasureHandle,
                                           MeasureResult, WorkerSpec)
 from repro.compiler.executor.wire import (PROTOCOL_VERSION, FrameBuffer,
@@ -90,6 +91,9 @@ class _Endpoint:
         self.n_reconnects = 0              # successful re-dials
         self.ack_lat_sum = 0.0             # started-ack -> result seconds
         self.ack_lat_n = 0
+        # daemon-side load telemetry (heartbeat "load", wire minor 1);
+        # {} until a telemetry-speaking daemon heartbeats
+        self.daemon_load: Dict[str, object] = {}
 
     @property
     def connected(self) -> bool:
@@ -107,7 +111,8 @@ class _Endpoint:
                 "reconnects": self.n_reconnects,
                 "in_flight": len(self.jobs),
                 "mean_ack_to_result_s": (self.ack_lat_sum / self.ack_lat_n
-                                         if self.ack_lat_n else 0.0)}
+                                         if self.ack_lat_n else 0.0),
+                "daemon": dict(self.daemon_load)}
 
 
 class RemoteExecutor(Executor):
@@ -489,7 +494,25 @@ class RemoteExecutor(Executor):
             ok = bool(msg.get("ok"))
             if not ok:
                 ep.n_failures += 1
+            span = msg.get("span")
+            if isinstance(span, dict):
+                # daemon-timed measure span (wire minor 1): merge into the
+                # session's timeline under this endpoint's lane
+                try:
+                    obs.current().add_span(
+                        str(span.get("name", "measure")),
+                        cat=str(span.get("cat", "measure")),
+                        wall_start_s=float(span["t_wall"]),
+                        dur_s=float(span["dur_s"]),
+                        tid=ep.label,
+                        args={"task": str(span.get("task", ""))})
+                except (KeyError, TypeError, ValueError):
+                    pass  # malformed telemetry must never fail a result
             job.handle._resolve(MeasureResult(
                 ok=ok, value=msg.get("value") if ok else None,
                 error="" if ok else str(msg.get("error", "unknown"))))
+        elif t == "heartbeat":
+            load = msg.get("load")
+            if isinstance(load, dict):  # wire minor 1 telemetry
+                ep.daemon_load = load
         # heartbeats already refreshed last_rx; ignore unknown types

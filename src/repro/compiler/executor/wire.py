@@ -19,9 +19,16 @@ other.  Message types:
                    this ack so daemon-side startup is never billed to the
                    configuration being measured.
 ``result``         worker -> client: ``{job_id, ok, value | error}``.
+                   Since minor 1 it may carry a ``"span"`` object —
+                   ``{name, cat, t_wall, dur_s}``, the daemon's own
+                   timing of the measure fn — which the executor merges
+                   into the session's ambient tracer (``repro.obs``).
 ``heartbeat``      either direction: liveness; the executor declares a
                    connection dead after ``heartbeat_timeout_s`` without
-                   any inbound frame.
+                   any inbound frame.  Since minor 1 daemon-side
+                   heartbeats may carry a ``"load"`` object — ``{busy,
+                   jobs_done, mean_measure_s}`` — surfaced per endpoint
+                   in ``RemoteExecutor.stats()``.
 ``shutdown``       client -> worker: close this connection cleanly
                    (``scope: "daemon"`` stops the whole daemon — used by
                    tests and fleet teardown).
@@ -46,6 +53,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.compiler.executor.base import WorkerSpec
 
 PROTOCOL_VERSION = 1
+# Minor revisions are additive-only: new *optional* keys on existing
+# frame types (result ``span``, heartbeat ``load``), which both sides
+# already ignore when unknown.  The handshake advertises ``minor`` but
+# never rejects on it — an old daemon (no minor field) still speaks to a
+# new executor and vice versa; only the major ``version`` gates.
+PROTOCOL_MINOR = 1
 _LEN = struct.Struct(">I")
 # A settings dict plus a spec is tiny; 64 MiB guards against a garbage
 # peer making the receiver allocate unbounded memory, not real payloads.
@@ -163,6 +176,7 @@ class WorkerCapabilities:
 
     def to_wire(self) -> Dict[str, object]:
         return {"type": "capabilities", "version": PROTOCOL_VERSION,
+                "minor": PROTOCOL_MINOR,
                 "slots": self.slots, "backend": self.backend,
                 "device_count": self.device_count, "env": dict(self.env),
                 "pid": self.pid, "host": self.host}

@@ -33,6 +33,7 @@ import os
 import socket
 import sys
 import threading
+import time
 import traceback
 from typing import Dict, Optional, Tuple
 
@@ -41,6 +42,7 @@ from repro.compiler.executor.wire import (PROTOCOL_VERSION, FrameBuffer,
                                           ProtocolError, WorkerCapabilities,
                                           device_count_pin, encode_frame,
                                           parse_endpoints, spec_from_wire)
+from repro.obs import log
 
 
 class _FactoryCache:
@@ -145,7 +147,10 @@ class _Connection:
 
     def _heartbeat_loop(self) -> None:
         while not self._closed.wait(self.daemon.heartbeat_s):
-            if not self.send({"type": "heartbeat"}):
+            # minor-1 extension: load telemetry rides the liveness frame
+            # (old executors ignore unknown keys)
+            if not self.send({"type": "heartbeat",
+                              "load": self.daemon.load_snapshot()}):
                 return
 
     def _read_loop(self) -> None:
@@ -196,14 +201,26 @@ class _Connection:
             # clock on this frame (same contract as the subprocess pool)
             if not self.send({"type": "started", "job_id": job_id}):
                 return
+            # the daemon times its own measure fn and ships the span in
+            # the result frame (minor-1 extension), so the session's
+            # trace carries daemon-side extents, not client-side guesses
+            t_wall = time.time()
+            t0 = time.monotonic()
+            self.daemon.job_started()
             try:
                 value = fn(settings)
             except Exception as e:  # infeasible configuration
+                dur = time.monotonic() - t0
+                self.daemon.job_finished(dur)
                 self.send({"type": "result", "job_id": job_id, "ok": False,
-                           "error": f"{type(e).__name__}: {e}"})
+                           "error": f"{type(e).__name__}: {e}",
+                           "span": self.daemon.job_span(msg, t_wall, dur)})
             else:
+                dur = time.monotonic() - t0
+                self.daemon.job_finished(dur)
                 self.send({"type": "result", "job_id": job_id, "ok": True,
-                           "value": value})
+                           "value": value,
+                           "span": self.daemon.job_span(msg, t_wall, dur)})
 
 
 class WorkerDaemon:
@@ -229,6 +246,11 @@ class WorkerDaemon:
         self.read_timeout_s = 0.25
         self.verbose = verbose
         self.factories = _FactoryCache()
+        # load telemetry shipped inside heartbeat frames (see wire.py)
+        self._load_lock = threading.Lock()
+        self.busy = 0            # jobs currently measuring
+        self.jobs_done = 0       # measure fn completions (ok or raised)
+        self.measure_s_sum = 0.0
         self.stopping = False
         self._conns: list[_Connection] = []
         self._thread: Optional[threading.Thread] = None
@@ -243,13 +265,38 @@ class WorkerDaemon:
     def endpoint(self) -> str:
         return f"{self.address[0]}:{self.address[1]}"
 
+    # --------------------------------------------------- load telemetry
+    def job_started(self) -> None:
+        with self._load_lock:
+            self.busy += 1
+
+    def job_finished(self, dur_s: float) -> None:
+        with self._load_lock:
+            self.busy -= 1
+            self.jobs_done += 1
+            self.measure_s_sum += dur_s
+
+    def load_snapshot(self) -> Dict[str, object]:
+        with self._load_lock:
+            mean = (self.measure_s_sum / self.jobs_done
+                    if self.jobs_done else None)
+            return {"busy": self.busy, "jobs_done": self.jobs_done,
+                    "mean_measure_s": mean}
+
+    @staticmethod
+    def job_span(msg: Dict[str, object], t_wall: float,
+                 dur_s: float) -> Dict[str, object]:
+        """Result-frame span payload for one measure-fn execution."""
+        return {"name": "measure", "cat": "measure",
+                "t_wall": t_wall, "dur_s": dur_s,
+                "task": str(msg.get("task", ""))}
+
     def serve_forever(self) -> None:
-        if self.verbose:
-            print(f"worker daemon listening on {self.endpoint} "
-                  f"(slots={self.capabilities.slots}, "
-                  f"backend={self.capabilities.backend}, "
-                  f"device_count={self.capabilities.device_count})",
-                  flush=True)
+        log.log("warn" if self.verbose else "info",
+                f"worker daemon listening on {self.endpoint} "
+                f"(slots={self.capabilities.slots}, "
+                f"backend={self.capabilities.backend}, "
+                f"device_count={self.capabilities.device_count})")
         while not self.stopping:
             try:
                 sock, peer = self._listener.accept()

@@ -80,7 +80,9 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
                             name: str = "network",
                             surrogates: Union[None, str,
                                               SurrogateStore] = None,
-                            remote=None
+                            remote=None,
+                            trace: Optional[str] = None,
+                            obs=None
                             ) -> NetworkReport:
     """DiGamma-style GA over (cuts, per-stage hw values) at netopt's
     budget: seed a population, then tournament-select two parents,
@@ -91,37 +93,39 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
     if k_chips is not None:
         cfg = dataclasses.replace(cfg, k_chips=int(k_chips))
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "genetic", surrogates=surrogates, remote=remote)
+                    "genetic", surrogates=surrogates, remote=remote,
+                    trace=trace, obs=obs)
     ps = ev.pspace
     rng = np.random.default_rng(cfg.seed)
     n_evals = cfg.n_candidates + 1     # netopt's candidate count + refine
     per_layer = max(cfg.total_layer_budget() // n_evals, 1)
     try:
-        ev.open()
-        fit: Dict[HwPartition, float] = {}
-        for p in ps.seed_partitions(min(population, n_evals), rng):
-            if p not in fit and len(fit) < n_evals:
-                fit[p] = ev.evaluate(p, per_layer, "genetic")
-        attempts = 0
-        while len(fit) < n_evals and attempts < 64:
-            attempts += 1
-            pool: List[HwPartition] = list(fit)
+        with ev.obs_scope():
+            ev.open()
+            fit: Dict[HwPartition, float] = {}
+            for p in ps.seed_partitions(min(population, n_evals), rng):
+                if p not in fit and len(fit) < n_evals:
+                    fit[p] = ev.evaluate(p, per_layer, "genetic")
+            attempts = 0
+            while len(fit) < n_evals and attempts < 64:
+                attempts += 1
+                pool: List[HwPartition] = list(fit)
 
-            def pick() -> HwPartition:  # size-2 tournament
-                i, j = rng.integers(0, len(pool), size=2)
-                a, b = pool[int(i)], pool[int(j)]
-                return a if fit[a] <= fit[b] else b
+                def pick() -> HwPartition:  # size-2 tournament
+                    i, j = rng.integers(0, len(pool), size=2)
+                    a, b = pool[int(i)], pool[int(j)]
+                    return a if fit[a] <= fit[b] else b
 
-            child = mutate(ps, crossover(ps, pick(), pick(), rng), rng)
-            for _ in range(8):
-                if child not in fit:
-                    break
-                child = mutate(ps, child, rng)
-            if child in fit:
-                child = ps.random_partition(rng)  # diversity fallback
-            if child in fit:
-                continue
-            fit[child] = ev.evaluate(child, per_layer, "genetic")
-        return ev.report()
+                child = mutate(ps, crossover(ps, pick(), pick(), rng), rng)
+                for _ in range(8):
+                    if child not in fit:
+                        break
+                    child = mutate(ps, child, rng)
+                if child in fit:
+                    child = ps.random_partition(rng)  # diversity fallback
+                if child in fit:
+                    continue
+                fit[child] = ev.evaluate(child, per_layer, "genetic")
+            return ev.report()
     finally:
         ev.close()

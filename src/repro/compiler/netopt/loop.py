@@ -33,6 +33,7 @@ same-network record replay above.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import shutil
@@ -42,6 +43,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs as obslib
 from repro.compiler.netopt.hwspace import (HW_KNOBS, HW_KNOB_NAMES,
                                            HwCandidateSpace, hw_dict, hw_tag)
 from repro.compiler.netopt.partition import HwPartition, PartitionSpace
@@ -120,7 +122,7 @@ class _Evaluator:
                  records: Union[None, str, RecordLog], workers: int,
                  timeout_s: Optional[float], name: str, algo: str,
                  surrogates: Union[None, str, SurrogateStore] = None,
-                 remote=None):
+                 remote=None, trace: Optional[str] = None, obs=None):
         self.tasks = list(tasks)
         if not self.tasks:
             raise ValueError("network co-optimization needs >= 1 task")
@@ -175,7 +177,19 @@ class _Evaluator:
         self.evaluated: Dict[HwPartition, Dict[str, object]] = {}
         self.cum_measurements = 0
         self.early_stop: Dict[str, object] = {}
+        # span tracing (repro.obs): ``obs=`` borrows the caller's Tracer,
+        # ``trace=`` builds one and saves it to that path at close()
+        self.trace_path = trace
+        self.tracer = obs if obs is not None else (
+            obslib.Tracer(name=name) if trace else None)
         self.t0 = time.perf_counter()
+
+    def obs_scope(self):
+        """Ambient-tracer activation for the whole run (no-op when the
+        run is untraced, so an *outer* tracer keeps collecting)."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return obslib.use(self.tracer)
 
     def open(self) -> None:
         if self.executor is not None:
@@ -196,12 +210,18 @@ class _Evaluator:
 
     def close(self) -> None:
         if self.executor is not None:
+            if self.tracer is not None:
+                self.tracer.metrics.record_executor_stats(
+                    self.executor.stats())
             if self._owns_executor:
                 self.executor.close()
             self.executor = None
         if self._tmp_records_dir is not None:
             shutil.rmtree(self._tmp_records_dir, ignore_errors=True)
             self._tmp_records_dir = None
+        if self.tracer is not None and self.trace_path:
+            path, self.trace_path = self.trace_path, None  # save once
+            self.tracer.save(path)
 
     # ------------------------------------------------------------- evaluate
     def evaluate(self, cand, layer_budget: int, phase: str) -> float:
@@ -211,6 +231,11 @@ class _Evaluator:
         latency.  Re-evaluating the same candidate (refinement, resume)
         replays warm from the per-(hw, layer) records before paying for
         anything new."""
+        with obslib.current().span(f"phase:{phase}", cat="phase",
+                                   budget=int(layer_budget)):
+            return self._evaluate(cand, layer_budget, phase)
+
+    def _evaluate(self, cand, layer_budget: int, phase: str) -> float:
         part = _coerce_partition(cand)
         segs = part.segments(len(self.tasks))
         tags = part.tags()
@@ -368,11 +393,11 @@ class NetworkCoOptimizer:
                  workers: int = 0, timeout_s: Optional[float] = None,
                  name: str = "network",
                  surrogates: Union[None, str, SurrogateStore] = None,
-                 remote=None):
+                 remote=None, trace: Optional[str] = None, obs=None):
         self.cfg = cfg or NetOptConfig()
         self._ev = _Evaluator(tasks, self.cfg, records, workers, timeout_s,
                               name, "netopt", surrogates=surrogates,
-                              remote=remote)
+                              remote=remote, trace=trace, obs=obs)
         self.pspace = self._ev.pspace
         self._pool: Optional[List[HwPartition]] = None
         self.hw_gbt = GBTModel(n_rounds=self.cfg.hw_gbt_rounds,
@@ -401,6 +426,13 @@ class NetworkCoOptimizer:
         prev_rank: Optional[Tuple[int, ...]] = None
         stable = 0
         try:
+            with ev.obs_scope():
+                return self._run(cfg, ev, ps, rng, prev_rank, stable)
+        finally:
+            ev.close()
+
+    def _run(self, cfg, ev, ps, rng, prev_rank, stable) -> NetworkReport:
+        try:
             ev.open()
             if self.warm_hw_rows > 0:
                 # transferred hardware surrogate: spend the seed round on
@@ -411,8 +443,11 @@ class NetworkCoOptimizer:
                 # trained transfer surrogate must not cost that insurance).
                 cands = ps.seed_partitions(min(cfg.seed_candidates, 2), rng)
                 if cfg.seed_candidates > len(cands):
-                    props = self._propose(cfg.seed_candidates - len(cands),
-                                          cfg.seed, exclude=cands)
+                    with obslib.current().span("phase:hw-select", cat="phase",
+                                               rnd=-1):
+                        props = self._propose(
+                            cfg.seed_candidates - len(cands),
+                            cfg.seed, exclude=cands)
                     cands += props
                     # only claim warm seeding when ranked proposals
                     # actually made it into the seed set (with <= 2 seed
@@ -433,7 +468,9 @@ class NetworkCoOptimizer:
                     X = np.stack([ps.features(p) for p, _ in fresh])
                     y = -np.log(np.maximum(
                         np.asarray([l for _, l in fresh]), 1e-12))
-                    self.hw_gbt.update(X, y)
+                    with obslib.current().span("phase:hw-refit", cat="phase",
+                                               n=len(fresh)):
+                        self.hw_gbt.update(X, y)
                     if cfg.stop_on_stable_ranking > 0:
                         rank = self._top_ranking(cfg.stable_top_k)
                         stable = stable + 1 if rank == prev_rank else 0
@@ -444,7 +481,10 @@ class NetworkCoOptimizer:
                             break
                 if rnd == cfg.hw_rounds:
                     break
-                cands = self._propose(cfg.hw_per_round, cfg.seed + rnd + 1)
+                with obslib.current().span("phase:hw-select", cat="phase",
+                                           rnd=rnd):
+                    cands = self._propose(cfg.hw_per_round,
+                                          cfg.seed + rnd + 1)
             if cfg.refine_budget > 0:
                 # the winner replays its layer_budget measurements from the
                 # records cache, then continues the software search deeper
@@ -564,19 +604,23 @@ def network_hw_frozen_tune(tasks: Iterable[TuningTask],
                            name: str = "network",
                            surrogates: Union[None, str,
                                              SurrogateStore] = None,
-                           remote=None
+                           remote=None,
+                           trace: Optional[str] = None,
+                           obs=None
                            ) -> NetworkReport:
     """Network-scope hw-frozen baseline: the single network-default chip,
     with the co-optimizer's *entire* per-layer budget spent on software
     mapping under it (equal-measurement-budget comparison)."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "hw_frozen", surrogates=surrogates, remote=remote)
+                    "hw_frozen", surrogates=surrogates, remote=remote,
+                    trace=trace, obs=obs)
     try:
-        ev.open()
-        ev.evaluate(ev.hw.default_values(ev.tasks),
-                    cfg.total_layer_budget(), "frozen")
-        return ev.report()
+        with ev.obs_scope():
+            ev.open()
+            ev.evaluate(ev.hw.default_values(ev.tasks),
+                        cfg.total_layer_budget(), "frozen")
+            return ev.report()
     finally:
         ev.close()
 
@@ -590,26 +634,30 @@ def network_random_hw_tune(tasks: Iterable[TuningTask],
                            name: str = "network",
                            surrogates: Union[None, str,
                                              SurrogateStore] = None,
-                           remote=None
+                           remote=None,
+                           trace: Optional[str] = None,
+                           obs=None
                            ) -> NetworkReport:
     """Network-scope random-hardware baseline: uniform candidates, budget
     split evenly — ablates the GBT + CS outer search."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
-                    "random_hw", surrogates=surrogates, remote=remote)
+                    "random_hw", surrogates=surrogates, remote=remote,
+                    trace=trace, obs=obs)
     rng = np.random.default_rng(cfg.seed)
     n_candidates = max(min(n_candidates, ev.hw.size), 1)
     per_layer = max(cfg.total_layer_budget() // n_candidates, 1)
     try:
-        ev.open()
-        attempts = 0
-        while len(ev.evaluated) < n_candidates and attempts < 64:
-            attempts += 1
-            v = ev.hw.values([rng.integers(0, len(c))
-                              for c in ev.hw.choices])
-            if _coerce_partition(v) in ev.evaluated:
-                continue
-            ev.evaluate(v, per_layer, "random")
-        return ev.report()
+        with ev.obs_scope():
+            ev.open()
+            attempts = 0
+            while len(ev.evaluated) < n_candidates and attempts < 64:
+                attempts += 1
+                v = ev.hw.values([rng.integers(0, len(c))
+                                  for c in ev.hw.choices])
+                if _coerce_partition(v) in ev.evaluated:
+                    continue
+                ev.evaluate(v, per_layer, "random")
+            return ev.report()
     finally:
         ev.close()

@@ -34,8 +34,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.compiler.executor import (Executor, MeasureResult, SerialExecutor,
                                      SubprocessExecutor, WorkerSpec)
+from repro.obs import log
 from repro.compiler.records import RecordLog
 from repro.core.design_space import DesignSpace
 
@@ -90,7 +92,10 @@ class PendingBatch:
         o = self._oracle
         if not self._collected:
             if self._inflight is not None:
-                lat, feats, extras = self._inflight.collect()
+                with obs.current().span("measure-wait", cat="executor-wait",
+                                        task=o.task,
+                                        n=len(self._miss_idx)):
+                    lat, feats, extras = self._inflight.collect()
                 for j, i in enumerate(self._miss_idx):
                     o._remember(self._keys[i], float(lat[j]),
                                 np.asarray(feats[j], np.float32),
@@ -160,7 +165,9 @@ class Oracle:
         """Start measuring ``configs``; returns an in-flight object with
         ``ready()`` / ``collect() -> (lat, feats, extras)``.  The default
         computes eagerly in-process via ``_measure_batch``."""
-        return _EagerBatch(self._measure_batch(configs))
+        with obs.current().span("measure", cat="measure", task=self.task,
+                                n=len(configs)):
+            return _EagerBatch(self._measure_batch(configs))
 
     def _measure_batch(self, configs: np.ndarray
                        ) -> Tuple[np.ndarray, np.ndarray, Optional[List]]:
@@ -303,9 +310,10 @@ class SettingsOracle(Oracle):
             self.failures += 1
             lat = self.penalty_latency
             extra["error"] = error[:300]
-            if self.verbose:
-                print(f"  measure {settings}: FAILED {extra['error'][:140]}",
-                      flush=True)
+            # verbose oracles surface every failure; quiet ones still log
+            # it at debug so REPRO_LOG=debug exposes the penalty rows
+            log.log("warn" if self.verbose else "debug",
+                    f"  measure {settings}: FAILED {extra['error'][:140]}")
         return lat, extra
 
     def close(self) -> None:

@@ -25,6 +25,8 @@ import json
 import os
 from typing import Dict, List, Optional
 
+from repro.obs import log
+
 
 class RecordLog:
     """Append-only JSONL file of oracle measurements (shared across tasks)."""
@@ -54,9 +56,8 @@ class RecordLog:
                 row = json.loads(lines[i])
             except ValueError:
                 if i == idx_nonempty[-1]:
-                    print(f"RecordLog: dropping corrupt trailing line "
-                          f"{i + 1} of {self.path} (killed mid-append?)",
-                          flush=True)
+                    log.warn(f"RecordLog: dropping corrupt trailing line "
+                             f"{i + 1} of {self.path} (killed mid-append?)")
                     break
                 raise ValueError(
                     f"{self.path}:{i + 1}: corrupt record mid-file") from None

@@ -38,10 +38,12 @@ Quickstart::
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, Iterable, Optional, Union
 
+from repro import obs
 from repro.compiler.records import RecordLog
 from repro.compiler.report import TuneReport
 from repro.compiler.surrogate_store import (SurrogateStore, attach_sw_gbt,
@@ -135,7 +137,9 @@ class Session:
                  gbt: Optional[GBTModel] = None,
                  executor=None,
                  surrogates: Union[None, str, SurrogateStore] = None,
-                 network: Optional[str] = None):
+                 network: Optional[str] = None,
+                 trace: Optional[str] = None,
+                 obs=None):
         if isinstance(tasks, TuningTask):
             tasks = [tasks]
         self.tasks = list(tasks)
@@ -195,6 +199,13 @@ class Session:
                 # mislabel half of them and poison later warm starts
                 raise ValueError("surrogates= needs tasks of one space "
                                  f"family, got {sorted(families)}")
+        # tracing: ``obs=`` is an externally owned Tracer (e.g. netopt's,
+        # shared so inner sessions land on one timeline); ``trace=`` makes
+        # this session build its own and save it there after run().  With
+        # neither, run() does NOT touch the ambient tracer — a session
+        # inside an active netopt trace inherits it.
+        self.trace_path = trace
+        self._obs = obs
         self._oracles = []  # created by run(), closed in its finally
         # ONE worker pool shared by all tasks; an external executor= is the
         # caller's pool (outlives the session — never closed here)
@@ -210,6 +221,23 @@ class Session:
 
     # ----------------------------------------------------------------- run
     def run(self) -> SessionReport:
+        tracer = self._obs
+        if tracer is None and self.trace_path:
+            tracer = obs.Tracer(name="session")
+        # no trace requested -> leave the ambient tracer alone (an outer
+        # netopt trace keeps collecting through this session)
+        scope = obs.use(tracer) if tracer is not None \
+            else contextlib.nullcontext()
+        try:
+            with scope:
+                with obs.current().span("session", cat="session",
+                                        algo=self.algo):
+                    return self._run()
+        finally:
+            if tracer is not None and self.trace_path:
+                tracer.save(self.trace_path)
+
+    def _run(self) -> SessionReport:
         t0 = time.perf_counter()
         surrogate_stats: Dict[str, object] = {}
         if self.surrogates is not None:
@@ -250,6 +278,7 @@ class Session:
             self._oracles = []
             if self._executor is not None and self._own_executor:
                 executor_stats = self._executor.stats()
+                obs.current().metrics.record_executor_stats(executor_stats)
                 self._executor.close()
                 self._executor = None
         for t in self.tasks:  # reports carry their task's layer weight

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.compiler.oracle import AnalyticalOracle, Oracle, decode_config
 from repro.compiler.report import Tracker, TuneReport
 from repro.core import confidence_sampling as CS
@@ -142,7 +143,9 @@ class ArcoLoop:
         self.track.add_active(time.perf_counter() - t0)
         self.track.record(cfgs, lat)
         t_fit = time.perf_counter()
-        self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
+        with obs.current().span("surrogate-refit", cat="surrogate",
+                                task=self.track.task, n=len(lat)):
+            self.gbt.update(feats, -np.log(np.maximum(lat, 1e-12)))
         self.track.add_active(time.perf_counter() - t_fit)
         return True
 
@@ -169,7 +172,9 @@ class ArcoLoop:
             self.rng, r = jax.random.split(self.rng)
             return self.space.random_configs(r, m)
 
-        cfgs = unique_seed_batch(draw, n, self.space.size)
+        with obs.current().span("seed-draw", cat="select",
+                                task=self.track.task, n=int(n)):
+            cfgs = unique_seed_batch(draw, n, self.space.size)
         batch = self.oracle.measure_async(cfgs)
         self.track.add_active(time.perf_counter() - t_start)
         self._pending = (cfgs, batch)
@@ -193,15 +198,17 @@ class ArcoLoop:
         t_start = time.perf_counter()
         self.it += 1
         cfg = self.cfg
-        forest = self.gbt.to_forest()
-        pool = []
-        for _ in range(cfg.episodes_per_iter):
-            self.rng, r_ep = jax.random.split(self.rng)
-            self.params, self.opt_state, visited, _stats = \
-                mappo.train_episode(self.params, self.opt_state, r_ep,
-                                    self.env, forest, cfg.mappo)
-            pool.append(np.asarray(visited))
-        pool_np = np.unique(np.concatenate(pool), axis=0)
+        with obs.current().span("mappo-update", cat="mappo",
+                                task=self.track.task, it=self.it):
+            forest = self.gbt.to_forest()
+            pool = []
+            for _ in range(cfg.episodes_per_iter):
+                self.rng, r_ep = jax.random.split(self.rng)
+                self.params, self.opt_state, visited, _stats = \
+                    mappo.train_episode(self.params, self.opt_state, r_ep,
+                                        self.env, forest, cfg.mappo)
+                pool.append(np.asarray(visited))
+            pool_np = np.unique(np.concatenate(pool), axis=0)
 
         # Confidence Sampling over the explored pool (critic-scored)
         scores = np.asarray(mappo.critic_scores(

@@ -1,0 +1,175 @@
+"""Counters / gauges / histograms behind one thread-safe registry.
+
+The registry unifies the per-executor ``stats()`` shapes: every executor
+already answers the same eight keys (``kind``, ``workers_alive``,
+``respawns``, ``queued``, ``running``, ``max_inflight``, ``jobs``,
+``failures``), and :meth:`Metrics.record_executor_stats` maps them onto
+typed instruments — monotone totals become counters, point-in-time
+occupancy becomes gauges — so a saved trace carries the terminal
+executor state next to its spans (``otherData.metrics`` in the Chrome
+export).
+
+Like the tracer, a :class:`NoopMetrics` singleton makes the disabled
+path allocation-free: instrument lookups return shared do-nothing
+objects.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Mapping
+
+
+class Counter:
+    """Monotonically increasing total (jobs completed, failures, ...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-written point-in-time value (queue depth, busy slots, ...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Streaming count/sum/min/max — enough for mean latencies without
+    holding every observation."""
+
+    __slots__ = ("count", "sum", "min", "max")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def snapshot(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0, "sum": 0.0}
+        return {"count": self.count, "sum": self.sum, "min": self.min,
+                "max": self.max, "mean": self.sum / self.count}
+
+
+class Metrics:
+    """Thread-safe name -> instrument registry.
+
+    Instruments are created on first use (``counter("jobs").inc()``);
+    individual updates take the registry lock only on creation — the
+    instruments themselves rely on the GIL for their single-field
+    updates, matching how the executors' own counters already behave.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def _get(self, table: dict, name: str, cls):
+        inst = table.get(name)
+        if inst is None:
+            with self._lock:
+                inst = table.setdefault(name, cls())
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(self._counters, name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(self._gauges, name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(self._histograms, name, Histogram)
+
+    def record_executor_stats(self, stats: Mapping[str, object],
+                              prefix: str = "executor") -> None:
+        """Map the uniform ``Executor.stats()`` keys onto instruments.
+
+        Totals (``jobs``, ``failures``, ``respawns``) land as counters
+        *set to* the executor's own running total (executors already
+        accumulate; re-recording overwrites rather than double-counts),
+        occupancy (``workers_alive``, ``queued``, ``running``,
+        ``max_inflight``) as gauges.
+        """
+        kind = stats.get("kind", "?")
+        for key in ("jobs", "failures", "respawns"):
+            if key in stats:
+                c = self.counter(f"{prefix}.{kind}.{key}")
+                c.value = float(stats[key])  # overwrite: source is a total
+        for key in ("workers_alive", "queued", "running", "max_inflight"):
+            if key in stats:
+                self.gauge(f"{prefix}.{kind}.{key}").set(float(stats[key]))
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": {k: g.value for k, g in self._gauges.items()},
+                "histograms": {k: h.snapshot()
+                               for k, h in self._histograms.items()},
+            }
+
+
+class _NoopInstrument:
+    __slots__ = ()
+    value = 0.0
+    count = 0
+    sum = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"count": 0, "sum": 0.0}
+
+
+_NOOP_INSTRUMENT = _NoopInstrument()
+
+
+class NoopMetrics:
+    """Allocation-free stand-in used by the disabled tracer."""
+
+    __slots__ = ()
+
+    def counter(self, name: str) -> _NoopInstrument:
+        return _NOOP_INSTRUMENT
+
+    def gauge(self, name: str) -> _NoopInstrument:
+        return _NOOP_INSTRUMENT
+
+    def histogram(self, name: str) -> _NoopInstrument:
+        return _NOOP_INSTRUMENT
+
+    def record_executor_stats(self, stats: Mapping[str, object],
+                              prefix: str = "executor") -> None:
+        pass
+
+    def snapshot(self) -> Dict[str, object]:
+        return {}

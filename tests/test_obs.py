@@ -1,0 +1,398 @@
+"""``repro.obs`` — tracing + metrics layer and its stack integration.
+
+Covers the tracer core (span nesting, thread safety, the disabled-path
+overhead guard), both export formats (Chrome-trace JSON validity, raw
+JSONL), the metrics registry's uniform executor-stats mapping, the
+remote fabric round-trip (daemon-shipped measure spans merged into the
+local timeline, heartbeat load telemetry in ``RemoteExecutor.stats()``),
+the no-observable-effect guarantee (byte-identical session reports with
+tracing on vs off at a fixed seed), the netopt ``--trace`` acceptance
+bar (named phase spans covering >= 95% of the run's wall clock, remote
+spans included), and the ``repro-bench/2`` artifact schema
+(``phase_times`` nesting sanctioned, everything else still flat/finite).
+"""
+import importlib.util
+import json
+import math
+import os
+import sys
+import threading
+import time
+
+import pytest
+
+from repro import obs
+from repro.compiler.executor import (RemoteExecutor, WorkerDaemon,
+                                     WorkerSpec)
+from repro.compiler.executor.stub import make_stub, stub_latency
+from repro.compiler.netopt import NetOptConfig, NetworkCoOptimizer
+from repro.compiler.oracle import SettingsOracle
+from repro.compiler.session import Session
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import DesignSpace
+from repro.core.tuner import TunerConfig
+from repro.obs.export import chrome_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+STUB = "repro.compiler.executor.stub:make_stub"
+STUB_SPEC = WorkerSpec(factory=STUB)
+WL_BIG = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
+WL_MID = dict(b=1, h=28, w=28, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+TINY = TunerConfig(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                   mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                   gbt_rounds=10)
+
+
+def _load_tool(name):
+    path = os.path.join(ROOT, "tools", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _load_benchmarks(name):
+    path = os.path.join(ROOT, "benchmarks", f"{name}.py")
+    if os.path.join(ROOT, "benchmarks") not in sys.path:
+        sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------- tracer core
+
+def test_span_nesting_records_depth_and_order():
+    tr = obs.Tracer(name="t")
+    with tr.span("outer", cat="phase"):
+        with tr.span("inner", cat="measure", n=3):
+            pass
+        tr.event("tick", cat="mark")
+    spans = {s["name"]: s for s in tr.spans()}
+    assert spans["inner"]["depth"] == 1 and spans["outer"]["depth"] == 0
+    assert spans["inner"]["args"] == {"n": 3}
+    # inner closed first, and sits inside outer's interval
+    assert spans["outer"]["t"] <= spans["inner"]["t"]
+    assert (spans["inner"]["t"] + spans["inner"]["dur"]
+            <= spans["outer"]["t"] + spans["outer"]["dur"] + 1e-6)
+    events = [e for e in tr.events() if e["ph"] == "i"]
+    assert len(events) == 1 and events[0]["name"] == "tick"
+
+
+def test_tracer_thread_safety():
+    tr = obs.Tracer(name="mt")
+    n_threads, n_spans = 8, 200
+
+    def work(i):
+        for j in range(n_spans):
+            with tr.span(f"w{i}", cat="measure"):
+                pass
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spans = tr.spans()
+    assert len(spans) == n_threads * n_spans
+    # per-thread depth stacks never interleave: everything is top-level
+    assert all(s["depth"] == 0 for s in spans)
+
+
+def test_ambient_default_is_noop_and_use_restores():
+    assert obs.current() is obs.NOOP
+    tr = obs.Tracer(name="scoped")
+    with obs.use(tr):
+        assert obs.current() is tr
+        with obs.use(None):  # re-entrant; None -> NOOP
+            assert obs.current() is obs.NOOP
+        assert obs.current() is tr
+    assert obs.current() is obs.NOOP
+
+
+def test_disabled_tracer_overhead_guard():
+    """The no-op path must stay nearly free: 50k span sites through the
+    NOOP singleton in well under the time 50k stub measurements take
+    (the <=1%-throughput-regression acceptance bar, expressed as an
+    in-test guard with generous headroom for CI jitter)."""
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.current().span("x", cat="measure"):
+            pass
+    noop_s = time.perf_counter() - t0
+    settings = {"tile_b": 1, "tile_ci": 64}
+    t0 = time.perf_counter()
+    for _ in range(2_000):
+        stub_latency(settings)
+    stub_per_call = (time.perf_counter() - t0) / 2_000
+    # 1% of the equivalent stub-measure time, with 10x slack
+    assert noop_s < max(0.01 * stub_per_call * n * 10, 0.5), (
+        f"noop span overhead {noop_s:.3f}s over {n} sites")
+
+
+def test_noop_tracer_full_api_is_inert(tmp_path):
+    noop = obs.NOOP
+    noop.event("e")
+    noop.add_span("s", wall_start_s=0.0, dur_s=1.0)
+    noop.add_span_mono("s", start_mono_s=0.0, dur_s=1.0)
+    noop.metrics.counter("c").inc()
+    noop.metrics.record_executor_stats({"kind": "serial", "jobs": 3})
+    assert noop.phase_times() == {}
+    assert noop.metrics.snapshot() == {}
+    noop.save(str(tmp_path / "never.json"))
+    assert not (tmp_path / "never.json").exists()
+
+
+# ------------------------------------------------------ metrics registry
+
+def test_metrics_registry_and_executor_stats_mapping():
+    m = obs.Metrics()
+    m.counter("jobs").inc()
+    m.counter("jobs").inc(2)
+    m.gauge("depth").set(7)
+    h = m.histogram("lat")
+    for v in (1.0, 3.0, 2.0):
+        h.observe(v)
+    m.record_executor_stats({"kind": "remote", "jobs": 10, "failures": 1,
+                             "workers_alive": 2, "queued": 0,
+                             "running": 1, "max_inflight": 4})
+    m.record_executor_stats({"kind": "remote", "jobs": 12, "failures": 1,
+                             "workers_alive": 2})  # overwrite, not add
+    snap = m.snapshot()
+    assert snap["counters"]["jobs"] == 3.0
+    assert snap["counters"]["executor.remote.jobs"] == 12.0
+    assert snap["gauges"]["executor.remote.workers_alive"] == 2.0
+    assert snap["histograms"]["lat"] == {"count": 3, "sum": 6.0, "min": 1.0,
+                                         "max": 3.0, "mean": 2.0}
+
+
+# ------------------------------------------------------------ export forms
+
+def _tiny_trace():
+    tr = obs.Tracer(name="exp")
+    with tr.span("phase:seed", cat="phase"):
+        with tr.span("measure", cat="measure"):
+            pass
+    tr.event("mark", cat="note")
+    tr.add_span("measure", cat="measure", wall_start_s=time.time() - 1.0,
+                dur_s=0.5, tid="host:123")
+    return tr
+
+
+def test_chrome_trace_export_is_valid(tmp_path):
+    tr = _tiny_trace()
+    path = tmp_path / "run.json"
+    tr.save(str(path))
+    doc = json.loads(path.read_text())
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["tracer"] == "exp"
+    for ev in doc["traceEvents"]:
+        assert {"name", "cat", "ph", "ts", "pid", "tid"} <= set(ev)
+        assert isinstance(ev["ts"], float) and math.isfinite(ev["ts"])
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+        if ev["ph"] == "i":
+            assert ev["s"] == "t"
+    # the remote span landed on its endpoint lane at an earlier wall time
+    remote = [e for e in doc["traceEvents"] if e["tid"] == "host:123"]
+    assert len(remote) == 1 and remote[0]["ph"] == "X"
+    local = [e for e in doc["traceEvents"] if e["name"] == "phase:seed"]
+    assert remote[0]["ts"] < local[0]["ts"]
+
+
+def test_jsonl_export_and_summary_tools(tmp_path):
+    ts = _load_tool("trace_summary")
+    tr = _tiny_trace()
+    for suffix in ("run.jsonl", "run.json"):
+        path = tmp_path / suffix
+        tr.save(str(path))
+        events = ts.load_events(str(path))
+        spans = [e for e in events if e["ph"] == "X" and e["dur_s"] > 0]
+        assert len(spans) == 3
+        assert ts.phase_totals(events).keys() == {"phase:seed"}
+        assert ts.tid_totals(events)["host:123"] == pytest.approx(0.5,
+                                                                  rel=1e-6)
+        assert "phase union coverage" in ts.summarize(str(path))
+    # jsonl rows carry absolute wall_s, one JSON object per line
+    lines = [json.loads(l) for l in
+             (tmp_path / "run.jsonl").read_text().splitlines()]
+    assert all("wall_s" in r and "t" not in r for r in lines)
+
+
+def test_union_seconds_merges_overlaps():
+    ts = _load_tool("trace_summary")
+    mk = lambda a, d: {"start_s": a, "dur_s": d}
+    assert ts.union_seconds([mk(0, 2), mk(1, 2), mk(5, 1)]) == \
+        pytest.approx(4.0)
+    assert ts.union_seconds([]) == 0.0
+
+
+# --------------------------------------------------- remote span round-trip
+
+def test_remote_spans_and_heartbeat_load_roundtrip():
+    """A real loopback daemon ships its own measure-fn timing inside the
+    result frame and load telemetry inside heartbeats: the executor-side
+    tracer shows per-endpoint measure spans, ``stats()`` the daemon
+    load."""
+    daemon = WorkerDaemon(heartbeat_s=0.2).start()
+    tr = obs.Tracer(name="remote")
+    try:
+        with obs.use(tr):
+            ex = RemoteExecutor(daemon.endpoint, heartbeat_s=0.1,
+                                heartbeat_timeout_s=2.0)
+            settings = [{"model_axis": 1 << i} for i in range(4)]
+            handles = [ex.submit("t", s, spec=STUB_SPEC) for s in settings]
+            ex.drain(handles)
+            assert all(h.result().ok for h in handles)
+            deadline = time.monotonic() + 5.0
+            load = {}
+            while time.monotonic() < deadline:  # next daemon heartbeat
+                ex.poll()  # the executor is cooperative: pump the selector
+                load = ex.stats()["endpoints"][daemon.endpoint]["daemon"]
+                if load.get("jobs_done", 0) >= 4:
+                    break
+                time.sleep(0.05)
+            ex.close()
+        spans = [s for s in tr.spans() if s["tid"] == daemon.endpoint]
+        assert len(spans) == 4
+        assert all(s["cat"] == "measure" and s["dur"] >= 0.0 for s in spans)
+        # re-anchored onto the local timeline: within the run's extent
+        local_now = time.monotonic()
+        assert all(-60.0 < s["t"] <= local_now for s in spans)
+        assert load["jobs_done"] >= 4 and load["busy"] == 0
+        assert load["mean_measure_s"] is None or load["mean_measure_s"] >= 0
+    finally:
+        daemon.stop()
+
+
+# --------------------------------------- tracing changes nothing measured
+
+def test_session_reports_byte_identical_with_tracing_on_off(tmp_path):
+    space = DesignSpace.for_conv2d(WL_MID)
+    docs = {}
+    for label, trace in (("off", None), ("on", str(tmp_path / "t.json"))):
+        task = TuningTask.from_space("c", space)
+        doc = Session(task, tuner=TINY, budget=8, seed=5,
+                      trace=trace).run().to_dict()
+        doc["wall_time_s"] = 0.0
+        doc["executor_stats"] = {}
+        for rep in doc["reports"].values():
+            rep["wall_time_s"] = 0.0
+            rep["history"] = [[n, lat, 0.0] for n, lat, _ in rep["history"]]
+        docs[label] = json.dumps(doc, sort_keys=True)
+    assert docs["on"] == docs["off"]
+    assert (tmp_path / "t.json").exists()  # and the trace was still written
+
+
+# ----------------------------------------------- netopt --trace acceptance
+
+def _stub_conv_tasks():
+    """Conv-space tasks measured by the stub fn so a remote executor
+    (rather than the analytical in-process path) does the measuring."""
+    def factory(task, records, workers=0, timeout_s=None, executor=None):
+        if executor is not None:
+            return SettingsOracle(task.space, fn=None, executor=executor,
+                                  task=task.name, records=records,
+                                  worker_spec=STUB_SPEC)
+        return SettingsOracle(task.space, fn=make_stub(), task=task.name,
+                              records=records)
+    return [TuningTask(name="c1", space=DesignSpace.for_conv2d(WL_BIG),
+                       oracle_factory=factory, multiplicity=2),
+            TuningTask(name="c2", space=DesignSpace.for_conv2d(WL_MID),
+                       oracle_factory=factory, multiplicity=1)]
+
+
+def test_netopt_trace_phase_coverage_with_remote_daemon(tmp_path):
+    """The acceptance bar: a traced netopt run over a loopback daemon
+    produces a Perfetto-loadable Chrome trace whose named phase spans
+    cover >= 95% of the reported wall time, including spans the daemon
+    timed itself."""
+    ts = _load_tool("trace_summary")
+    path = tmp_path / "netopt.trace.json"
+    cfg = NetOptConfig(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                       layer_budget=4, refine_budget=4, tuner=TINY)
+    daemon = WorkerDaemon(slots=2, heartbeat_s=0.2).start()
+    try:
+        ex = RemoteExecutor(daemon.endpoint, heartbeat_s=0.1,
+                            heartbeat_timeout_s=5.0)
+        try:
+            rep = NetworkCoOptimizer(_stub_conv_tasks(), cfg, remote=ex,
+                                     name="obs-net",
+                                     trace=str(path)).run()
+        finally:
+            ex.close()
+    finally:
+        daemon.stop()
+    assert rep.wall_time_s > 0
+    doc = json.loads(path.read_text())  # valid Chrome-trace JSON
+    assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
+    events = ts.load_events(str(path))
+    phase_spans = [e for e in events
+                   if e["ph"] == "X" and e["cat"] == "phase"]
+    assert {"phase:seed", "phase:refine"} <= {e["name"]
+                                              for e in phase_spans}
+    covered = ts.union_seconds(phase_spans)
+    assert covered >= 0.95 * rep.wall_time_s, (
+        f"phase spans cover {covered:.3f}s of {rep.wall_time_s:.3f}s "
+        f"({100 * covered / rep.wall_time_s:.1f}% < 95%)")
+    # daemon-side spans made it across the wire onto the endpoint lane
+    remote_spans = ts.tid_totals(events, "measure")
+    assert daemon.endpoint in remote_spans
+    # terminal executor stats rode along in the metrics snapshot
+    counters = doc["otherData"]["metrics"]["counters"]
+    assert counters.get("executor.remote.jobs", 0) > 0
+
+
+# ------------------------------------------------------ bench schema v2
+
+def _bench_doc(schema="repro-bench/2", **metrics):
+    base = {"coopt_network_latency_s": 1.5, "wall_time_s": 2.0}
+    base.update(metrics)
+    return {"schema": schema, "bench": "b", "created_unix": 1.0,
+            "git_rev": "abc", "config": {}, "metrics": base}
+
+
+def test_bench_schema_v2_accepts_phase_times_rejects_other_nesting():
+    tr = _load_benchmarks("tuning_runs")
+    assert tr.BENCH_SCHEMA == "repro-bench/2"
+    ok = _bench_doc(phase_times={"phase:seed": 1.0, "phase:cs": 0.5})
+    assert tr.validate_bench_doc(ok) is ok
+    # /1 (strictly flat) still validates
+    assert tr.validate_bench_doc(_bench_doc(schema="repro-bench/1"))
+    with pytest.raises(ValueError, match="phase_times"):
+        tr.validate_bench_doc(_bench_doc(phase_times={"p": float("nan")}))
+    with pytest.raises(ValueError, match="metric"):  # unsanctioned nesting
+        tr.validate_bench_doc(_bench_doc(other={"nested": 1.0}))
+    with pytest.raises(ValueError):  # /1 never allowed nesting; still true
+        tr.validate_bench_doc(_bench_doc(schema="repro-bench/1",
+                                         phase_times={"p": 1.0}))
+    with pytest.raises(ValueError, match="schema"):
+        tr.validate_bench_doc(_bench_doc(schema="repro-bench/3"))
+    with pytest.raises(ValueError, match="finite"):
+        tr.validate_bench_doc(_bench_doc(bad=float("inf")))
+
+
+def test_write_bench_artifact_roundtrips_phase_times(tmp_path):
+    tr = _load_benchmarks("tuning_runs")
+    path = str(tmp_path / "BENCH_x.json")
+    doc = tr.write_bench_artifact(
+        path, "x", {"lat_s": 0.25, "phase_times": {"phase:seed": 1.25}},
+        config={"budget": 4})
+    reread = json.loads(open(path).read())
+    assert reread["schema"] == "repro-bench/2"
+    assert reread["metrics"]["phase_times"] == {"phase:seed": 1.25}
+    assert tr.validate_bench_doc(reread)
+    assert doc["metrics"]["lat_s"] == 0.25
+
+
+def test_tracer_phase_times_sums_by_name():
+    tr = obs.Tracer(name="pt")
+    tr.add_span_mono("phase:seed", cat="phase", start_mono_s=0.0, dur_s=1.0)
+    tr.add_span_mono("phase:seed", cat="phase", start_mono_s=2.0, dur_s=0.5)
+    tr.add_span_mono("measure", cat="measure", start_mono_s=0.0, dur_s=9.0)
+    assert tr.phase_times() == {"phase:seed": 1.5}

@@ -6,7 +6,7 @@ schema-mismatch rejection, dimension/network filtering, warm starts),
 the ``surrogates=`` wiring through ``Session`` and ``netopt`` (transfer
 stats, GBT-ranked warm seeding, the warm-from-self == record-replay
 invariant), the new surrogate fields in the report round-trips, and the
-hardened ``repro-bench/1`` artifact writer.
+hardened ``repro-bench/2`` artifact writer.
 """
 import glob
 import importlib.util
@@ -332,7 +332,7 @@ def test_write_bench_artifact_includes_git_rev_and_validates(tmp_path):
     tr = _load_benchmarks("tuning_runs")
     path = str(tmp_path / "BENCH_x.json")
     doc = tr.write_bench_artifact(path, "x", {"m": 1.0}, config={"n": 2})
-    assert doc["schema"] == "repro-bench/1"
+    assert doc["schema"] == tr.BENCH_SCHEMA == "repro-bench/2"
     assert doc["git_rev"] and isinstance(doc["git_rev"], str)
     assert tr.validate_bench_doc(json.load(open(path))) == doc
     for bad in (

@@ -49,6 +49,11 @@ REQUIRED = (
     "repro.core.tuner",
     "repro.core.baselines",
     "repro.launch.autotune",
+    "repro.obs",
+    "repro.obs.export",
+    "repro.obs.log",
+    "repro.obs.metrics",
+    "repro.obs.trace",
 )
 
 

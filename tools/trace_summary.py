@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Break a saved trace's wall clock into named phases and categories.
+
+Reads either form ``repro.obs`` writes — Chrome-trace JSON
+(``--trace run.json``) or raw JSONL (``run.jsonl``) — and reports where
+the run's time went:
+
+* per-**phase** totals (netopt ``phase:seed`` / ``phase:cs`` /
+  ``phase:refine`` / ``phase:hw-refit`` ... spans), plus their
+  union-of-intervals coverage of the trace's wall extent;
+* per-**category** totals (measure vs surrogate-refit vs mappo-update vs
+  executor-wait vs executor dispatch overhead);
+* per-**tid** measure totals — for remote runs, one row per worker
+  daemon endpoint.
+
+Usage::
+
+    python tools/trace_summary.py artifacts/run.trace.json
+
+Stdlib only (like everything under ``repro.obs``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterable, List, Tuple
+
+
+def load_events(path: str) -> List[Dict[str, object]]:
+    """Normalize either trace format to rows with seconds-valued
+    ``start_s``/``dur_s`` (duration spans only carry ``dur_s > 0``)."""
+    with open(path) as f:
+        text = f.read()
+    # Both forms start with "{": a Chrome trace is ONE JSON object with
+    # "traceEvents"; anything else (including a whole-file parse failure)
+    # is one raw event object per line.
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        doc = None
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return [{
+            "name": ev.get("name", "?"),
+            "cat": ev.get("cat", ""),
+            "ph": ev.get("ph", "X"),
+            "tid": ev.get("tid", ""),
+            "start_s": float(ev.get("ts", 0.0)) / 1e6,
+            "dur_s": float(ev.get("dur", 0.0)) / 1e6,
+        } for ev in doc["traceEvents"]]
+    rows = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        ev = json.loads(line)
+        rows.append({
+            "name": ev.get("name", "?"),
+            "cat": ev.get("cat", ""),
+            "ph": ev.get("ph", "X"),
+            "tid": ev.get("tid", ""),
+            "start_s": float(ev.get("wall_s", 0.0)),
+            "dur_s": float(ev.get("dur", 0.0)),
+        })
+    return rows
+
+
+def union_seconds(spans: Iterable[Dict[str, object]]) -> float:
+    """Total seconds covered by the union of span intervals (overlap
+    counted once) — the honest coverage number for nested/parallel
+    spans."""
+    ivals: List[Tuple[float, float]] = sorted(
+        (s["start_s"], s["start_s"] + s["dur_s"]) for s in spans
+        if s["dur_s"] > 0)
+    total = 0.0
+    cur_a = cur_b = None
+    for a, b in ivals:
+        if cur_b is None or a > cur_b:
+            if cur_b is not None:
+                total += cur_b - cur_a
+            cur_a, cur_b = a, b
+        elif b > cur_b:
+            cur_b = b
+    if cur_b is not None:
+        total += cur_b - cur_a
+    return total
+
+
+def _spans(events: Iterable[Dict[str, object]]) -> List[Dict[str, object]]:
+    return [e for e in events if e["ph"] == "X" and e["dur_s"] > 0]
+
+
+def phase_totals(events: Iterable[Dict[str, object]]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for s in _spans(events):
+        if s["cat"] == "phase":
+            out[s["name"]] = out.get(s["name"], 0.0) + s["dur_s"]
+    return out
+
+
+def category_totals(events: Iterable[Dict[str, object]]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for s in _spans(events):
+        cat = s["cat"] or "default"
+        out[cat] = out.get(cat, 0.0) + s["dur_s"]
+    return out
+
+
+def tid_totals(events: Iterable[Dict[str, object]],
+               cat: str = "measure") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for s in _spans(events):
+        if s["cat"] == cat:
+            out[str(s["tid"])] = out.get(str(s["tid"]), 0.0) + s["dur_s"]
+    return out
+
+
+def wall_extent_s(events: Iterable[Dict[str, object]]) -> float:
+    spans = _spans(events)
+    if not spans:
+        return 0.0
+    t0 = min(s["start_s"] for s in spans)
+    t1 = max(s["start_s"] + s["dur_s"] for s in spans)
+    return t1 - t0
+
+
+def _table(title: str, rows: Dict[str, float], wall: float) -> str:
+    lines = [title]
+    for name, sec in sorted(rows.items(), key=lambda kv: -kv[1]):
+        pct = 100.0 * sec / wall if wall else 0.0
+        lines.append(f"  {name:<28s} {sec:10.3f} s  {pct:5.1f}%")
+    return "\n".join(lines)
+
+
+def summarize(path: str) -> str:
+    events = load_events(path)
+    spans = _spans(events)
+    wall = wall_extent_s(events)
+    phases = phase_totals(events)
+    parts = [
+        f"trace: {path}",
+        f"spans: {len(spans)}   wall extent: {wall:.3f} s",
+    ]
+    if phases:
+        covered = union_seconds(
+            [s for s in spans if s["cat"] == "phase"])
+        pct = 100.0 * covered / wall if wall else 0.0
+        parts.append(_table("phases (cat=phase):", phases, wall))
+        parts.append(f"  phase union coverage: {covered:.3f} s"
+                     f" ({pct:.1f}% of wall extent)")
+    parts.append(_table("categories:", category_totals(events), wall))
+    meas = tid_totals(events, "measure")
+    if len(meas) > 1:
+        parts.append(_table("measure seconds by tid/endpoint:", meas, wall))
+    return "\n".join(parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace file (.json Chrome trace or .jsonl)")
+    args = ap.parse_args(argv)
+    print(summarize(args.trace))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
