@@ -34,7 +34,8 @@ def software_only_comparison(args, cfg, tasks):
         records = args.records and f"{args.records}.{fw}.jsonl"
         sr = Session(tasks, tuner=cfg, algo=fw, budget=args.budget,
                      records=records, workers=args.workers,
-                     timeout_s=args.timeout_s, remote=args.remote).run()
+                     timeout_s=args.timeout_s, remote=args.remote,
+                     monitor=args.monitor_server).run()
         # per-task bests weighted by each task's own layer multiplicity
         totals[fw] = sr.network_latency()
         walls[fw] = sr.wall_time_s
@@ -67,17 +68,18 @@ def coopt_comparison(args, cfg, tasks):
     coopt = NetworkCoOptimizer(
         tasks, ncfg, records=args.records and f"{args.records}.netopt.jsonl",
         workers=args.workers, timeout_s=args.timeout_s, remote=args.remote,
-        name="resnet-18", surrogates=store_from_args(args)).run()
+        name="resnet-18", surrogates=store_from_args(args),
+        monitor=args.monitor_server).run()
     if coopt.surrogates:
         print(f"surrogate transfer: {coopt.surrogates}")
     frozen = network_hw_frozen_tune(
         tasks, ncfg, records=args.records and f"{args.records}.frozen.jsonl",
         workers=args.workers, timeout_s=args.timeout_s, remote=args.remote,
-        name="resnet-18")
+        name="resnet-18", monitor=args.monitor_server)
     fantasy = Session(tasks, tuner=cfg, budget=total,
                       records=args.records and f"{args.records}.fantasy.jsonl",
                       workers=args.workers, timeout_s=args.timeout_s,
-                      remote=args.remote).run()
+                      remote=args.remote, monitor=args.monitor_server).run()
 
     hw = ", ".join(f"{k}={v}" for k, v in coopt.hw_config.items())
     print(f"co-optimized       {coopt.network_latency * 1e6:10.1f} us   "
@@ -140,8 +142,17 @@ def main():
     # One tracer spanning every method's session: sub-runs without their
     # own trace= inherit the ambient tracer, so the whole comparison lands
     # in a single merged timeline.
-    tracer = obs.Tracer(name="tune-resnet18") if args.trace else None
+    tracer = obs.Tracer(name="tune-resnet18",
+                        sample_rate=args.trace_sample_rate) \
+        if args.trace else None
     scope = obs.use(tracer) if tracer else contextlib.nullcontext()
+    # ... and one monitor server shared (borrowed) by every sub-run: each
+    # attaches its own /status source, finalized when that run ends.
+    args.monitor_server = None
+    if args.monitor is not None:
+        args.monitor_server = obs.MonitorServer(port=args.monitor).start()
+        print(f"live monitor at {args.monitor_server.url} "
+              "(/metrics /status /trace)")
     try:
         with scope:
             if args.coopt:
@@ -155,6 +166,8 @@ def main():
         if tracer:
             tracer.save(args.trace)
             print(f"trace written to {args.trace}")
+        if args.monitor_server is not None:
+            args.monitor_server.stop()
 
 
 if __name__ == "__main__":

@@ -129,6 +129,8 @@ def _run_tune(args) -> int:
                       records=args.records, seed=args.seed,
                       workers=args.workers, timeout_s=args.timeout_s,
                       remote=args.remote, trace=args.trace,
+                      trace_sample_rate=args.trace_sample_rate,
+                      monitor=args.monitor,
                       surrogates=store, network=label)
     summary = session.run().to_dict()
     if args.compact and store is not None:
@@ -160,7 +162,9 @@ def _run_netopt(args) -> int:
     store = store_from_args(args)
     kw = dict(records=args.records, workers=args.workers,
               timeout_s=args.timeout_s, remote=args.remote, name=name,
-              surrogates=store, trace=args.trace)
+              surrogates=store, trace=args.trace,
+              trace_sample_rate=args.trace_sample_rate,
+              monitor=args.monitor)
     if args.baseline == "hw-frozen":
         rep = network_hw_frozen_tune(tasks, cfg, **kw)
     elif args.baseline == "random-hw":

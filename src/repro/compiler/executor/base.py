@@ -92,6 +92,17 @@ def add_worker_args(parser) -> None:
              "(load in Perfetto / chrome://tracing; summarize with "
              "tools/trace_summary.py), or raw JSONL if PATH ends in "
              ".jsonl")
+    parser.add_argument(
+        "--trace-sample-rate", type=float, default=1.0, metavar="RATE",
+        help="keep this fraction of per-measurement measure/dispatch "
+             "spans in the trace (phase-level spans are always kept; "
+             "dropped spans stay accounted in the trace's sampling "
+             "metadata); needs --trace")
+    parser.add_argument(
+        "--monitor", type=int, default=None, metavar="PORT",
+        help="serve live /metrics (Prometheus), /status (JSON), and "
+             "/trace on http://127.0.0.1:PORT for the duration of the "
+             "run (0 = ephemeral port)")
 
 
 def validate_worker_args(parser, args) -> None:
@@ -105,6 +116,12 @@ def validate_worker_args(parser, args) -> None:
             and not getattr(args, "remote", None)):
         parser.error("--timeout-s needs --workers >= 1 or --remote "
                      "(in-process measurements cannot be preempted)")
+    rate = getattr(args, "trace_sample_rate", 1.0)
+    if not 0.0 <= rate <= 1.0:
+        parser.error("--trace-sample-rate must be in [0, 1]")
+    if rate < 1.0 and not getattr(args, "trace", None):
+        parser.error("--trace-sample-rate needs --trace (there is no "
+                     "trace to sample without it)")
 
 
 class MeasureHandle:

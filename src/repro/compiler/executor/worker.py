@@ -230,7 +230,8 @@ class WorkerDaemon:
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  slots: int = 1, backend: str = "cpu",
                  device_count: Optional[int] = None,
-                 heartbeat_s: float = 2.0, verbose: bool = False):
+                 heartbeat_s: float = 2.0, verbose: bool = False,
+                 status_port: Optional[int] = None):
         if device_count is None:
             # advertise the topology this process is already pinned to, so
             # heterogeneous routing works without repeating --device-count
@@ -252,6 +253,13 @@ class WorkerDaemon:
         self.jobs_done = 0       # measure fn completions (ok or raised)
         self.measure_s_sum = 0.0
         self.stopping = False
+        # self-served monitoring (--status-port): each daemon exposes its
+        # own /metrics + /status, so fleet health is scrapeable even for
+        # daemons no executor is currently connected to
+        self.monitor = None
+        if status_port is not None:
+            from repro.obs.serve import MonitorServer
+            self.monitor = MonitorServer(port=int(status_port), host=host)
         self._conns: list[_Connection] = []
         self._thread: Optional[threading.Thread] = None
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -291,7 +299,30 @@ class WorkerDaemon:
                 "t_wall": t_wall, "dur_s": dur_s,
                 "task": str(msg.get("task", ""))}
 
+    def _status(self) -> Dict[str, object]:
+        caps = self.capabilities
+        return {"kind": "worker", "endpoint": self.endpoint,
+                "slots": caps.slots, "backend": caps.backend,
+                "device_count": caps.device_count,
+                "pid": caps.pid, "host": caps.host,
+                "connections": sum(1 for c in list(self._conns)
+                                   if not c._closed.is_set()),
+                "load": self.load_snapshot()}
+
+    def _collect_metrics(self, metrics) -> None:
+        load = self.load_snapshot()
+        metrics.counter("worker.jobs_done").value = float(load["jobs_done"])
+        metrics.gauge("worker.busy").set(float(load["busy"]))
+        with self._load_lock:
+            metrics.counter("worker.measure_s").value = self.measure_s_sum
+
     def serve_forever(self) -> None:
+        if self.monitor is not None:
+            self.monitor.start()
+            self.monitor.attach("worker", self._status,
+                                collector=self._collect_metrics)
+            log.log("warn" if self.verbose else "info",
+                    f"worker daemon status at {self.monitor.url}")
         log.log("warn" if self.verbose else "info",
                 f"worker daemon listening on {self.endpoint} "
                 f"(slots={self.capabilities.slots}, "
@@ -323,6 +354,8 @@ class WorkerDaemon:
         self._listener.close()
         for conn in self._conns:
             conn.close()
+        if self.monitor is not None:
+            self.monitor.stop()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
             self._thread = None
@@ -395,6 +428,10 @@ def main(argv=None) -> int:
     ap.add_argument("--port-file", default=None,
                     help="write the bound HOST:PORT here once listening "
                          "(spawners using port 0 read it back)")
+    ap.add_argument("--status-port", type=int, default=None,
+                    metavar="PORT",
+                    help="self-serve /metrics + /status on this HTTP port "
+                         "(0 = ephemeral; off by default)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     (host, port), = parse_endpoints(args.listen)
@@ -402,7 +439,8 @@ def main(argv=None) -> int:
                           backend=args.backend,
                           device_count=args.device_count,
                           heartbeat_s=args.heartbeat_s,
-                          verbose=args.verbose or args.port_file is None)
+                          verbose=args.verbose or args.port_file is None,
+                          status_port=args.status_port)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

@@ -82,7 +82,9 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
                                               SurrogateStore] = None,
                             remote=None,
                             trace: Optional[str] = None,
-                            obs=None
+                            obs=None,
+                            monitor=None,
+                            trace_sample_rate: float = 1.0
                             ) -> NetworkReport:
     """DiGamma-style GA over (cuts, per-stage hw values) at netopt's
     budget: seed a population, then tournament-select two parents,
@@ -94,7 +96,8 @@ def network_genetic_hw_tune(tasks: Iterable[TuningTask],
         cfg = dataclasses.replace(cfg, k_chips=int(k_chips))
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
                     "genetic", surrogates=surrogates, remote=remote,
-                    trace=trace, obs=obs)
+                    trace=trace, obs=obs, monitor=monitor,
+                    trace_sample_rate=trace_sample_rate)
     ps = ev.pspace
     rng = np.random.default_rng(cfg.seed)
     n_evals = cfg.n_candidates + 1     # netopt's candidate count + refine

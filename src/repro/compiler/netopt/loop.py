@@ -122,7 +122,8 @@ class _Evaluator:
                  records: Union[None, str, RecordLog], workers: int,
                  timeout_s: Optional[float], name: str, algo: str,
                  surrogates: Union[None, str, SurrogateStore] = None,
-                 remote=None, trace: Optional[str] = None, obs=None):
+                 remote=None, trace: Optional[str] = None, obs=None,
+                 monitor=None, trace_sample_rate: float = 1.0):
         self.tasks = list(tasks)
         if not self.tasks:
             raise ValueError("network co-optimization needs >= 1 task")
@@ -181,7 +182,19 @@ class _Evaluator:
         # ``trace=`` builds one and saves it to that path at close()
         self.trace_path = trace
         self.tracer = obs if obs is not None else (
-            obslib.Tracer(name=name) if trace else None)
+            obslib.Tracer(name=name, sample_rate=trace_sample_rate)
+            if trace else None)
+        # live monitoring (repro.obs.serve): port -> owned server, a
+        # MonitorServer instance -> borrowed.  The /status source and
+        # scrape-time collector only *read* evaluator/executor state, so
+        # reports stay byte-identical with monitoring on vs off.
+        self.current_phase = ""
+        self.monitor = None
+        self._owns_monitor = False
+        self._monitor_source = None
+        if monitor is not None:
+            from repro.obs.serve import coerce_monitor
+            self.monitor, self._owns_monitor = coerce_monitor(monitor)
         self.t0 = time.perf_counter()
 
     def obs_scope(self):
@@ -192,6 +205,11 @@ class _Evaluator:
         return obslib.use(self.tracer)
 
     def open(self) -> None:
+        if self.monitor is not None and self._monitor_source is None:
+            self.monitor.start()
+            self._monitor_source = self.monitor.attach(
+                f"netopt:{self.name}", self._live_status,
+                collector=self._collect_metrics, tracer=self.tracer)
         if self.executor is not None:
             return
         if self.workers > 0:
@@ -209,6 +227,11 @@ class _Evaluator:
                                                timeout_s=self.timeout_s)
 
     def close(self) -> None:
+        # freeze the monitor's final snapshot while the executor is
+        # still scrapeable; an owned server then stops with the run, a
+        # borrowed one keeps serving the frozen values
+        if self.monitor is not None and self._monitor_source:
+            self.monitor.finalize(self._monitor_source)
         if self.executor is not None:
             if self.tracer is not None:
                 self.tracer.metrics.record_executor_stats(
@@ -216,12 +239,50 @@ class _Evaluator:
             if self._owns_executor:
                 self.executor.close()
             self.executor = None
+        if self.monitor is not None and self._owns_monitor:
+            self.monitor.stop()
+            self.monitor = None
         if self._tmp_records_dir is not None:
             shutil.rmtree(self._tmp_records_dir, ignore_errors=True)
             self._tmp_records_dir = None
         if self.tracer is not None and self.trace_path:
             path, self.trace_path = self.trace_path, None  # save once
             self.tracer.save(path)
+
+    # ------------------------------------------------------ live monitoring
+    def best_latency_or_none(self) -> Optional[float]:
+        vals = [float(e["network_latency"]) for e in self.evaluated.values()]
+        return min(vals) if vals else None
+
+    def _live_status(self) -> Dict[str, object]:
+        """Copy-on-read /status section: outer-search progress + fleet
+        health (the remote executor's per-endpoint detail, including
+        daemon heartbeat load, rides in ``executor``)."""
+        return {
+            "kind": "netopt", "network": self.name, "algo": self.algo,
+            "phase": self.current_phase,
+            "k_chips": int(self.cfg.k_chips),
+            "hw_candidates": len(self.evaluated),
+            "cum_measurements": int(self.cum_measurements),
+            "budget_upper_bound": int(self.cfg.total_layer_budget()
+                                      * len(self.tasks)),
+            "best_network_latency": self.best_latency_or_none(),
+            "surrogates": dict(self.surrogate_stats),
+            "early_stop": dict(self.early_stop),
+            "executor": (self.executor.stats()
+                         if self.executor is not None else {}),
+        }
+
+    def _collect_metrics(self, metrics) -> None:
+        metrics.counter("netopt.measurements").value = \
+            float(self.cum_measurements)
+        metrics.counter("netopt.hw_candidates").value = \
+            float(len(self.evaluated))
+        best = self.best_latency_or_none()
+        if best is not None:
+            metrics.gauge("netopt.best_network_latency_s").set(best)
+        if self.executor is not None:
+            metrics.record_executor_stats(self.executor.stats())
 
     # ------------------------------------------------------------- evaluate
     def evaluate(self, cand, layer_budget: int, phase: str) -> float:
@@ -231,6 +292,7 @@ class _Evaluator:
         latency.  Re-evaluating the same candidate (refinement, resume)
         replays warm from the per-(hw, layer) records before paying for
         anything new."""
+        self.current_phase = phase
         with obslib.current().span(f"phase:{phase}", cat="phase",
                                    budget=int(layer_budget)):
             return self._evaluate(cand, layer_budget, phase)
@@ -393,11 +455,14 @@ class NetworkCoOptimizer:
                  workers: int = 0, timeout_s: Optional[float] = None,
                  name: str = "network",
                  surrogates: Union[None, str, SurrogateStore] = None,
-                 remote=None, trace: Optional[str] = None, obs=None):
+                 remote=None, trace: Optional[str] = None, obs=None,
+                 monitor=None, trace_sample_rate: float = 1.0):
         self.cfg = cfg or NetOptConfig()
         self._ev = _Evaluator(tasks, self.cfg, records, workers, timeout_s,
                               name, "netopt", surrogates=surrogates,
-                              remote=remote, trace=trace, obs=obs)
+                              remote=remote, trace=trace, obs=obs,
+                              monitor=monitor,
+                              trace_sample_rate=trace_sample_rate)
         self.pspace = self._ev.pspace
         self._pool: Optional[List[HwPartition]] = None
         self.hw_gbt = GBTModel(n_rounds=self.cfg.hw_gbt_rounds,
@@ -606,7 +671,9 @@ def network_hw_frozen_tune(tasks: Iterable[TuningTask],
                                              SurrogateStore] = None,
                            remote=None,
                            trace: Optional[str] = None,
-                           obs=None
+                           obs=None,
+                           monitor=None,
+                           trace_sample_rate: float = 1.0
                            ) -> NetworkReport:
     """Network-scope hw-frozen baseline: the single network-default chip,
     with the co-optimizer's *entire* per-layer budget spent on software
@@ -614,7 +681,8 @@ def network_hw_frozen_tune(tasks: Iterable[TuningTask],
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
                     "hw_frozen", surrogates=surrogates, remote=remote,
-                    trace=trace, obs=obs)
+                    trace=trace, obs=obs, monitor=monitor,
+                    trace_sample_rate=trace_sample_rate)
     try:
         with ev.obs_scope():
             ev.open()
@@ -636,14 +704,17 @@ def network_random_hw_tune(tasks: Iterable[TuningTask],
                                              SurrogateStore] = None,
                            remote=None,
                            trace: Optional[str] = None,
-                           obs=None
+                           obs=None,
+                           monitor=None,
+                           trace_sample_rate: float = 1.0
                            ) -> NetworkReport:
     """Network-scope random-hardware baseline: uniform candidates, budget
     split evenly — ablates the GBT + CS outer search."""
     cfg = cfg or NetOptConfig()
     ev = _Evaluator(tasks, cfg, records, workers, timeout_s, name,
                     "random_hw", surrogates=surrogates, remote=remote,
-                    trace=trace, obs=obs)
+                    trace=trace, obs=obs, monitor=monitor,
+                    trace_sample_rate=trace_sample_rate)
     rng = np.random.default_rng(cfg.seed)
     n_candidates = max(min(n_candidates, ev.hw.size), 1)
     per_layer = max(cfg.total_layer_budget() // n_candidates, 1)

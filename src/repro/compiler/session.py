@@ -139,7 +139,9 @@ class Session:
                  surrogates: Union[None, str, SurrogateStore] = None,
                  network: Optional[str] = None,
                  trace: Optional[str] = None,
-                 obs=None):
+                 obs=None,
+                 monitor=None,
+                 trace_sample_rate: float = 1.0):
         if isinstance(tasks, TuningTask):
             tasks = [tasks]
         self.tasks = list(tasks)
@@ -206,11 +208,81 @@ class Session:
         # inside an active netopt trace inherits it.
         self.trace_path = trace
         self._obs = obs
+        self.trace_sample_rate = float(trace_sample_rate)
+        # live monitoring (repro.obs.serve): ``monitor=PORT`` starts an
+        # owned MonitorServer for this run; ``monitor=MonitorServer`` is
+        # borrowed (a shared server hosting several runs) — either way the
+        # session attaches a /status source + scrape-time collector and
+        # finalizes it (freezing the last snapshot) before teardown.
+        # Monitoring never touches session state, so reports stay
+        # byte-identical with it on vs off.
+        self._monitor_arg = monitor
+        self._monitor = None
+        self._monitor_owned = False
+        self._monitor_source = None
+        self._loops = []  # live ArcoLoop list (status snapshots read it)
+        self._live_reports: Dict[str, TuneReport] = {}
         self._oracles = []  # created by run(), closed in its finally
         # ONE worker pool shared by all tasks; an external executor= is the
         # caller's pool (outlives the session — never closed here)
         self._executor = executor
         self._own_executor = executor is None
+
+    # ------------------------------------------------------ live monitoring
+    def _live_progress(self):
+        """Copy-on-read progress numbers for the monitor: per-task state,
+        total paid measurements, and the weighted best-so-far network
+        latency (defined once every task has a finite best)."""
+        mult = {t.name: t.multiplicity for t in self.tasks}
+        tasks: Dict[str, Dict[str, object]] = {}
+        for loop in list(self._loops):
+            tr = loop.track
+            best = float(tr.best_lat)
+            tasks[tr.task] = {
+                "measurements": int(tr.count),
+                "best_latency": best if best < float("inf") else None,
+            }
+        for name, rep in dict(self._live_reports).items():
+            tasks[name] = {"measurements": int(rep.n_measurements),
+                           "best_latency": float(rep.best_latency),
+                           "done": True}
+        total = sum(int(t["measurements"]) for t in tasks.values())
+        net = None
+        if tasks and all(t["best_latency"] is not None
+                         for t in tasks.values()):
+            net = sum(float(t["best_latency"]) * mult.get(n, 1)
+                      for n, t in tasks.items())
+        return tasks, total, net
+
+    def _live_status(self) -> Dict[str, object]:
+        tasks, total, net = self._live_progress()
+        oracle = {"hits": 0, "misses": 0, "failures": 0}
+        for o in list(self._oracles):
+            st = o.stats()
+            for k in oracle:
+                oracle[k] += int(st.get(k, 0))
+        executor = self._executor
+        return {
+            "kind": "session", "algo": self.algo,
+            "budget_per_task": int(self.budget),
+            "n_tasks": len(self.tasks),
+            "measurements": total,
+            "best_network_latency": net,
+            "tasks": tasks,
+            "oracle": oracle,
+            "executor": executor.stats() if executor is not None else {},
+        }
+
+    def _collect_metrics(self, metrics) -> None:
+        """Scrape-time collector: map live progress + executor stats onto
+        the monitor's own registry (never the ambient tracer's)."""
+        tasks, total, net = self._live_progress()
+        metrics.counter("session.measurements").value = float(total)
+        if net is not None:
+            metrics.gauge("session.network_latency").set(net)
+        executor = self._executor
+        if executor is not None:
+            metrics.record_executor_stats(executor.stats())
 
     def _make_oracle(self, task: TuningTask):
         oracle = task.make_oracle(self.records, workers=self.workers,
@@ -223,11 +295,20 @@ class Session:
     def run(self) -> SessionReport:
         tracer = self._obs
         if tracer is None and self.trace_path:
-            tracer = obs.Tracer(name="session")
+            tracer = obs.Tracer(name="session",
+                                sample_rate=self.trace_sample_rate)
         # no trace requested -> leave the ambient tracer alone (an outer
         # netopt trace keeps collecting through this session)
         scope = obs.use(tracer) if tracer is not None \
             else contextlib.nullcontext()
+        if self._monitor_arg is not None:
+            from repro.obs.serve import coerce_monitor
+            self._monitor, self._monitor_owned = \
+                coerce_monitor(self._monitor_arg)
+            self._monitor.start()
+            self._monitor_source = self._monitor.attach(
+                "session", self._live_status,
+                collector=self._collect_metrics, tracer=tracer)
         try:
             with scope:
                 with obs.current().span("session", cat="session",
@@ -236,6 +317,9 @@ class Session:
         finally:
             if tracer is not None and self.trace_path:
                 tracer.save(self.trace_path)
+            if self._monitor is not None and self._monitor_owned:
+                self._monitor.stop()
+                self._monitor = None
 
     def _run(self) -> SessionReport:
         t0 = time.perf_counter()
@@ -273,6 +357,11 @@ class Session:
             else:
                 reports = self._run_baseline(shared_gbt)
         finally:
+            # freeze the monitor's last snapshot FIRST, while oracles,
+            # trackers, and the executor are all still readable — a
+            # post-run scrape then answers with final values
+            if self._monitor is not None and self._monitor_source:
+                self._monitor.finalize(self._monitor_source)
             for oracle in self._oracles:  # tear down any worker pools
                 oracle.close()
             self._oracles = []
@@ -311,6 +400,7 @@ class Session:
                          n_rounds=self.cfg.gbt_rounds, seed=self.cfg.seed),
                      use_cs=self.use_cs, task=t.name)
             for t in self.tasks]
+        self._loops = loops  # live-status snapshots read the trackers
         # Seed all tasks first, collecting (and refitting) in task order —
         # identical refit order to the sequential path, but the seed
         # batches of all tasks share the worker pool.
@@ -353,7 +443,8 @@ class Session:
         ``oracle.measure`` calls still fan each *batch* across the worker
         pool when the oracle is executor-backed.)"""
         from repro.core import baselines as B
-        reports: Dict[str, TuneReport] = {}
+        self._live_reports.clear()
+        reports = self._live_reports  # filled per task; /status reads it
         for t in self.tasks:
             oracle = self._make_oracle(t)
             kw = dict(cfg=self.cfg, budget=self.budget, oracle=oracle,

@@ -117,7 +117,8 @@ def search(arch: str, shape_name: str, budget: int = 14,
            seed: int = 0, out_path: str = None,
            records_path: str = None,
            workers: int = 0, timeout_s: float = None,
-           remote: str = None, trace: str = None):
+           remote: str = None, trace: str = None,
+           monitor=None, trace_sample_rate: float = 1.0):
     """Thin adapter over the session API: one compile-oracle cell, measured
     through ``CompileOracle``.  Re-measures from scratch unless the caller
     opts into persistence with ``records_path`` (JSONL), from which a re-run
@@ -141,7 +142,8 @@ def search(arch: str, shape_name: str, budget: int = 14,
     task = TuningTask.cell(arch, shape_name, n_devices=len(jax.devices()))
     result = Session(task, tuner=cfg, budget=budget, records=records_path,
                      workers=workers, timeout_s=timeout_s,
-                     remote=remote, trace=trace).run().single
+                     remote=remote, trace=trace, monitor=monitor,
+                     trace_sample_rate=trace_sample_rate).run().single
     summary = {
         "arch": arch, "shape": shape_name,
         "best_settings": result.best_settings,
@@ -176,7 +178,8 @@ def main():
     s = search(args.arch, args.shape, args.budget, out_path=args.out,
                records_path=args.records, workers=args.workers,
                timeout_s=args.timeout_s, remote=args.remote,
-               trace=args.trace)
+               trace=args.trace, monitor=args.monitor,
+               trace_sample_rate=args.trace_sample_rate)
     print(json.dumps(s, indent=1))
 
 

@@ -32,14 +32,18 @@ pair (:mod:`repro.obs.trace`), the counters/gauges/histograms registry
 over saved traces.
 """
 from repro.obs.metrics import Metrics, NoopMetrics
+from repro.obs.serve import MonitorServer, active_servers, prometheus_text
 from repro.obs.trace import NOOP, NoopTracer, Tracer, current, use
 
 __all__ = [
     "Metrics",
+    "MonitorServer",
     "NOOP",
     "NoopMetrics",
     "NoopTracer",
     "Tracer",
+    "active_servers",
     "current",
+    "prometheus_text",
     "use",
 ]

@@ -40,13 +40,17 @@ def chrome_trace(tracer) -> Dict[str, object]:
         if "args" in ev:
             row["args"] = ev["args"]
         out.append(row)
+    other: Dict[str, object] = {
+        "tracer": tracer.name,
+        "metrics": tracer.metrics.snapshot(),
+    }
+    sampling = getattr(tracer, "sampling_stats", lambda: {})()
+    if sampling:
+        other["sampling"] = sampling
     return {
         "traceEvents": out,
         "displayTimeUnit": "ms",
-        "otherData": {
-            "tracer": tracer.name,
-            "metrics": tracer.metrics.snapshot(),
-        },
+        "otherData": other,
     }
 
 
@@ -64,6 +68,14 @@ def save_trace(tracer, path: str) -> None:
                 row = dict(ev)
                 row["wall_s"] = tracer.epoch + row.pop("t")
                 f.write(json.dumps(row, sort_keys=True, default=str) + "\n")
+            # sampled tracer: a trailing metadata row carries the exact
+            # kept/dropped bookkeeping (ph "M" — readers that only look
+            # at "X"/"i" rows skip it harmlessly)
+            sampling = getattr(tracer, "sampling_stats", lambda: {})()
+            if sampling:
+                f.write(json.dumps(
+                    {"ph": "M", "name": "sampling", "args": sampling,
+                     "wall_s": 0.0}, sort_keys=True, default=str) + "\n")
         return
     with open(path, "w") as f:
         json.dump(chrome_trace(tracer), f, indent=1, default=str)

@@ -20,11 +20,17 @@ netopt trace inherits the outer tracer because a session without its own
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from typing import Dict, List, Optional
 
 from repro.obs.metrics import Metrics, NoopMetrics
+
+# Categories eligible for probabilistic sampling: the per-measurement
+# firehose.  Structural spans (phases, session/mappo/gbt steps) are
+# always kept — they are few and carry the wall-clock attribution.
+SAMPLED_CATS = frozenset({"measure", "dispatch"})
 
 
 class _SpanHandle:
@@ -64,12 +70,26 @@ class Tracer:
     rides along into the export's ``otherData``.
     """
 
-    def __init__(self, name: str = "repro") -> None:
+    def __init__(self, name: str = "repro", sample_rate: float = 1.0,
+                 sample_seed: int = 0) -> None:
+        if not 0.0 <= sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in [0, 1], "
+                             f"got {sample_rate}")
         self.name = name
         self.enabled = True
         # wall-clock seconds at monotonic zero: wall = epoch + monotonic
         self.epoch = time.time() - time.monotonic()
         self.metrics = Metrics()
+        # Span sampling for million-measurement runs: spans in
+        # SAMPLED_CATS are kept with probability ``sample_rate`` (own
+        # RNG — the tuner's seeded RNG streams must not shift with the
+        # sampling decision); dropped spans still accumulate exact
+        # (count, total-duration) bookkeeping per category so
+        # trace_summary coverage math stays honest.
+        self.sample_rate = float(sample_rate)
+        self._sample_rng = random.Random(sample_seed)
+        self._kept: Dict[str, int] = {}
+        self._dropped: Dict[str, List[float]] = {}  # cat -> [count, dur_s]
         self._lock = threading.Lock()
         self._events: List[Dict[str, object]] = []
         self._local = threading.local()
@@ -123,6 +143,15 @@ class Tracer:
         if args:
             ev["args"] = args
         with self._lock:
+            if self.sample_rate < 1.0 and cat in SAMPLED_CATS:
+                if self._sample_rng.random() >= self.sample_rate:
+                    acc = self._dropped.get(cat)
+                    if acc is None:
+                        acc = self._dropped[cat] = [0, 0.0]
+                    acc[0] += 1
+                    acc[1] += dur_s
+                    return
+                self._kept[cat] = self._kept.get(cat, 0) + 1
             self._events.append(ev)
 
     def _stack(self) -> List[str]:
@@ -136,6 +165,43 @@ class Tracer:
     def events(self) -> List[Dict[str, object]]:
         with self._lock:
             return list(self._events)
+
+    def sampling_stats(self) -> Dict[str, object]:
+        """Per-category kept/dropped bookkeeping — ``{}`` at rate 1.0 (no
+        sampling, nothing to account for).  ``dropped_dur_s`` is the
+        *exact* summed duration of dropped spans, so category totals can
+        be reconstructed exactly rather than estimated from the rate."""
+        if self.sample_rate >= 1.0:
+            return {}
+        with self._lock:
+            cats: Dict[str, Dict[str, float]] = {}
+            for cat in sorted(set(self._kept) | set(self._dropped)):
+                d = self._dropped.get(cat, (0, 0.0))
+                cats[cat] = {"kept": int(self._kept.get(cat, 0)),
+                             "dropped": int(d[0]),
+                             "dropped_dur_s": float(d[1])}
+            return {"sample_rate": self.sample_rate, "cats": cats}
+
+    def recent_spans(self, limit: int = 256) -> List[Dict[str, object]]:
+        """Tail of the most recent complete spans, wall-clock anchored —
+        the copy-on-read snapshot ``/trace`` serves.  The lock is held
+        only for the tail slice; dict conversion happens outside it."""
+        with self._lock:
+            tail = self._events[-max(int(limit), 0) * 4:] if limit else []
+        out: List[Dict[str, object]] = []
+        for ev in tail:
+            if ev["ph"] != "X":
+                continue
+            row: Dict[str, object] = {
+                "name": ev["name"], "cat": ev["cat"],
+                "tid": ev["tid"], "depth": ev["depth"],
+                "wall_s": self.epoch + float(ev["t"]),
+                "dur_s": float(ev["dur"]),
+            }
+            if "args" in ev:
+                row["args"] = ev["args"]
+            out.append(row)
+        return out[-max(int(limit), 0):]
 
     def spans(self) -> List[Dict[str, object]]:
         return [e for e in self.events() if e["ph"] == "X"]
@@ -198,6 +264,12 @@ class NoopTracer:
 
     def phase_times(self) -> Dict[str, float]:
         return {}
+
+    def sampling_stats(self) -> Dict[str, object]:
+        return {}
+
+    def recent_spans(self, limit: int = 256) -> List[Dict[str, object]]:
+        return []
 
     def save(self, path: str) -> None:
         pass

@@ -1,0 +1,651 @@
+"""``repro.obs.serve`` — the live monitoring service — and its riders.
+
+Covers the :class:`MonitorServer` endpoints and lifecycle (ephemeral
+ports, source attach/finalize/freeze, broken-callback isolation, the
+``active_servers()`` registry), the Prometheus text exposition, the
+span-sampling bookkeeping (dropped measure/dispatch seconds folded back
+exactly — never estimated — through both export forms), the
+``trace_diff`` and ``bench_compare`` regression gates, the metrics
+edge cases (bucket quantiles, all three executor ``stats()`` shapes,
+concurrent counter increments), and the acceptance bar: a live netopt
+run over a loopback worker daemon whose final ``/metrics`` scrape
+matches the :class:`NetworkReport` exactly — with the report itself
+byte-identical monitor-on vs monitor-off.
+"""
+import glob
+import importlib.util
+import json
+import math
+import os
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro import obs
+from repro.compiler.cli import main as cli_main
+from repro.compiler.executor import (RemoteExecutor, SerialExecutor,
+                                     WorkerDaemon, WorkerSpec)
+from repro.compiler.executor.stub import make_stub
+from repro.compiler.netopt import NetOptConfig, NetworkCoOptimizer
+from repro.compiler.oracle import SettingsOracle
+from repro.compiler.session import Session
+from repro.compiler.task import TuningTask
+from repro.core import mappo
+from repro.core.design_space import DesignSpace
+from repro.core.tuner import TunerConfig
+from repro.obs.metrics import Counter, Histogram, Metrics
+from repro.obs.serve import MonitorServer, coerce_monitor, prometheus_text
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+STUB = "repro.compiler.executor.stub:make_stub"
+STUB_SPEC = WorkerSpec(factory=STUB)
+WL_BIG = dict(b=1, h=14, w=14, ci=256, co=256, kh=3, kw=3, stride=1, pad=1)
+WL_MID = dict(b=1, h=28, w=28, ci=128, co=128, kh=3, kw=3, stride=1, pad=1)
+TINY = TunerConfig(iteration_opt=3, b_measure=8, episodes_per_iter=2,
+                   mappo=mappo.MappoConfig(n_steps=16, n_envs=8),
+                   gbt_rounds=10)
+
+
+def _load_tool(name):
+    path = os.path.join(ROOT, "tools", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _load_benchmarks(name):
+    path = os.path.join(ROOT, "benchmarks", f"{name}.py")
+    if os.path.join(ROOT, "benchmarks") not in sys.path:
+        sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode()
+
+
+def _get_json(url):
+    status, body = _get(url)
+    assert status == 200
+    return json.loads(body)
+
+
+def _metric_value(text, name):
+    """The sample value for ``name`` in a Prometheus exposition body."""
+    for line in text.splitlines():
+        if line.startswith(name + " "):
+            return float(line.split()[-1])
+    raise KeyError(f"{name} not in:\n{text}")
+
+
+# ------------------------------------------------------- server lifecycle
+
+def test_monitor_server_endpoints_and_lifecycle():
+    srv = MonitorServer(port=0).start()
+    try:
+        assert srv.port > 0 and srv.running
+        assert srv in obs.active_servers()
+        srv.metrics.gauge("demo.g").set(3.5)
+        srv.attach("demo", lambda: {"kind": "demo", "n": 7})
+        status, body = _get(srv.url + "/")
+        assert status == 200
+        assert set(json.loads(body)["endpoints"]) == {"/metrics", "/status",
+                                                      "/trace"}
+        st = _get_json(srv.url + "/status")
+        assert st["sources"]["demo"] == {"kind": "demo", "n": 7}
+        assert st["uptime_s"] >= 0.0
+        status, text = _get(srv.url + "/metrics")
+        assert status == 200
+        assert _metric_value(text, "repro_demo_g") == 3.5
+        assert _get_json(srv.url + "/trace") == {"spans": []}  # no tracer
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+    finally:
+        srv.stop()
+    assert not srv.running and srv not in obs.active_servers()
+    with pytest.raises(urllib.error.URLError):
+        _get(srv.url + "/status", timeout=2.0)
+
+
+def test_monitor_start_stop_idempotent_and_context_manager():
+    with MonitorServer(port=0) as srv:
+        assert srv.start() is srv  # second start is a no-op
+        port = srv.port
+        assert _get_json(f"http://127.0.0.1:{port}/status")["sources"] == {}
+    assert not srv.running
+    srv.stop()  # second stop is a no-op
+
+
+def test_attach_collision_suffix_and_finalize_freezes():
+    state = {"n": 1}
+    collected = []
+    srv = MonitorServer(port=0).start()
+    try:
+        a = srv.attach("run", lambda: dict(state),
+                       collector=lambda m: collected.append(1))
+        b = srv.attach("run", lambda: {"other": True})
+        assert (a, b) == ("run", "run#2")  # borrowed server, two runs
+        state["n"] = 5
+        assert srv.status_snapshot()["sources"]["run"] == {"n": 5}
+        srv.metrics_text()
+        n_live = len(collected)
+        assert n_live >= 1  # collectors run at scrape time
+        srv.finalize("run")
+        state["n"] = 99  # too late: the snapshot was frozen at finalize
+        srv.finalize("run")  # idempotent: collector must not run again
+        assert len(collected) == n_live + 1
+        st = srv.status_snapshot()["sources"]
+        assert st["run"] == {"n": 5, "final": True}
+        assert st["run#2"] == {"other": True}  # still live
+        srv.metrics_text()
+        assert len(collected) == n_live + 1  # dropped from live collectors
+    finally:
+        srv.stop()
+
+
+def test_broken_callbacks_never_kill_scrapes():
+    def boom():
+        raise RuntimeError("kaput")
+
+    srv = MonitorServer(port=0).start()
+    try:
+        srv.attach("bad", boom, collector=lambda m: boom())
+        srv.attach("good", lambda: {"ok": True})
+        st = _get_json(srv.url + "/status")
+        assert "RuntimeError" in st["sources"]["bad"]["error"]
+        assert st["sources"]["good"] == {"ok": True}
+        status, _text = _get(srv.url + "/metrics")  # collector failure
+        assert status == 200                        # -> logged, not fatal
+    finally:
+        srv.stop()
+
+
+def test_coerce_monitor_owned_vs_borrowed():
+    assert coerce_monitor(None) == (None, False)
+    srv, owned = coerce_monitor(0)
+    assert isinstance(srv, MonitorServer) and owned and not srv.running
+    srv2, owned2 = coerce_monitor(srv)
+    assert srv2 is srv and not owned2
+
+
+# -------------------------------------------------- prometheus exposition
+
+def test_prometheus_text_rendering():
+    m = Metrics()
+    m.counter("executor.remote.jobs").inc(60)
+    m.gauge("netopt.best_network_latency_s").set(0.0001665)
+    for v in (1.0, 3.0, 2.0):
+        m.histogram("lat.s").observe(v)
+    text = prometheus_text(m.snapshot())
+    assert "# TYPE repro_executor_remote_jobs counter" in text
+    assert _metric_value(text, "repro_executor_remote_jobs") == 60
+    assert "# TYPE repro_netopt_best_network_latency_s gauge" in text
+    # exact round-trip: repr() for non-integral floats
+    assert _metric_value(text, "repro_netopt_best_network_latency_s") \
+        == 0.0001665
+    assert "# TYPE repro_lat_s summary" in text
+    assert 'repro_lat_s{quantile="0.5"} 2' in text
+    assert 'repro_lat_s{quantile="0.99"} 3' in text
+    assert _metric_value(text, "repro_lat_s_count") == 3
+    assert _metric_value(text, "repro_lat_s_sum") == 6.0
+    assert prometheus_text({}) == ""
+    assert prometheus_text(Metrics().snapshot()) == ""
+
+
+# ------------------------------------------------------ metrics edge cases
+
+def test_histogram_quantiles_and_edge_cases():
+    h = Histogram()
+    assert h.snapshot() == {"count": 0, "sum": 0.0}
+    assert math.isnan(h.quantile(0.5))
+    h.observe(5.0)  # single value: every quantile clamps to it
+    assert h.quantile(0.0) == h.quantile(0.5) == h.quantile(1.0) == 5.0
+    h2 = Histogram()
+    for v in (1.0, 3.0, 2.0):
+        h2.observe(v)
+    assert (h2.quantile(0.5), h2.quantile(0.9), h2.quantile(0.99)) \
+        == (2.0, 3.0, 3.0)
+    h3 = Histogram()  # non-positive values share one underflow bucket
+    for v in (-5.0, 0.0, 4.0):
+        h3.observe(v)
+    assert h3.quantile(0.01) == 0.0  # the underflow bucket's upper bound
+    assert h3.quantile(1.0) == 4.0
+    assert h3.snapshot()["min"] == -5.0 and h3.snapshot()["max"] == 4.0
+    h4 = Histogram()  # all-negative stream: bound clamps down to max
+    h4.observe(-5.0)
+    assert h4.quantile(0.5) == -5.0
+
+
+def test_record_executor_stats_all_three_shapes():
+    m = Metrics()
+    serial = SerialExecutor().stats()
+    assert serial["kind"] == "serial"
+    m.record_executor_stats(serial)
+    # the other two pools answer the same eight keys (remote adds the
+    # per-endpoint block, which maps no instrument); shapes mirror
+    # SubprocessExecutor.stats() / RemoteExecutor.stats()
+    m.record_executor_stats({"kind": "subprocess", "workers_alive": 2,
+                             "respawns": 1, "queued": 3, "running": 2,
+                             "max_inflight": 4, "jobs": 10, "failures": 2})
+    m.record_executor_stats({"kind": "remote", "workers_alive": 1,
+                             "respawns": 0, "queued": 0, "running": 1,
+                             "max_inflight": 8, "jobs": 60, "failures": 0,
+                             "endpoints": {"h:1": {"jobs": 60}}})
+    snap = m.snapshot()
+    for kind in ("serial", "subprocess", "remote"):
+        assert f"executor.{kind}.jobs" in snap["counters"]
+        assert f"executor.{kind}.workers_alive" in snap["gauges"]
+    assert snap["counters"]["executor.subprocess.jobs"] == 10.0
+    assert snap["counters"]["executor.remote.jobs"] == 60.0
+    assert snap["gauges"]["executor.remote.max_inflight"] == 8.0
+    # re-recording overwrites (source is a running total), never adds
+    m.record_executor_stats({"kind": "remote", "jobs": 61})
+    assert m.snapshot()["counters"]["executor.remote.jobs"] == 61.0
+
+
+def test_counter_concurrent_increments_exact():
+    c = Counter()
+    n_threads, n_incs = 8, 5_000
+
+    def work():
+        for _ in range(n_incs):
+            c.inc()
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == float(n_threads * n_incs)
+
+
+# ----------------------------------------------------------- span sampling
+
+def _sampled_tracer(n=400, rate=0.25):
+    tr = obs.Tracer(name="s", sample_rate=rate, sample_seed=1)
+    with tr.span("phase:seed", cat="phase"):
+        for i in range(n):
+            tr.add_span_mono("measure", cat="measure",
+                             start_mono_s=float(i), dur_s=1.0)
+    return tr
+
+
+def test_span_sampling_exact_bookkeeping():
+    with pytest.raises(ValueError):
+        obs.Tracer(name="bad", sample_rate=1.5)
+    tr = _sampled_tracer()
+    spans = tr.spans()
+    # phase spans are NEVER sampled; measure spans are
+    assert [s for s in spans if s["cat"] == "phase"]
+    kept = [s for s in spans if s["cat"] == "measure"]
+    st = tr.sampling_stats()
+    assert st["sample_rate"] == 0.25
+    ms = st["cats"]["measure"]
+    assert ms["kept"] == len(kept)
+    assert ms["kept"] + ms["dropped"] == 400
+    assert 0 < ms["kept"] < 400  # it actually sampled
+    # the dropped seconds are EXACT (each span was 1.0s), not estimated
+    assert ms["dropped_dur_s"] == float(ms["dropped"])
+    # full-rate tracer reports no sampling at all
+    assert obs.Tracer(name="full").sampling_stats() == {}
+    assert obs.NOOP.sampling_stats() == {}
+
+
+def test_sampling_honest_totals_through_both_exports(tmp_path):
+    ts = _load_tool("trace_summary")
+    tr = _sampled_tracer()
+    for suffix in ("run.json", "run.jsonl"):
+        path = str(tmp_path / suffix)
+        tr.save(path)
+        events = ts.load_events(path)
+        sampling = ts.sampling_info(events)
+        assert sampling["sample_rate"] == 0.25
+        # category totals fold the dropped seconds back in: exactly the
+        # 400 x 1.0s that were recorded, regardless of what was kept
+        cats = ts.category_totals(events, sampling)
+        assert cats["measure"] == pytest.approx(400.0, abs=1e-9)
+        assert "sampled trace" in ts.summarize(path)
+    # unsampled traces keep byte-for-byte identical summaries: no
+    # sampling row, no correction
+    full = obs.Tracer(name="f")
+    full.add_span_mono("measure", cat="measure", start_mono_s=0.0, dur_s=2.0)
+    p = str(tmp_path / "full.jsonl")
+    full.save(p)
+    ev = ts.load_events(p)
+    assert ts.sampling_info(ev) == {}
+    assert ts.category_totals(ev)["measure"] == pytest.approx(2.0)
+
+
+def test_recent_spans_tail_is_wall_anchored_and_bounded():
+    tr = obs.Tracer(name="tail")
+    for _ in range(50):
+        with tr.span("measure", cat="measure"):
+            pass
+    tail = tr.recent_spans(limit=8)
+    assert len(tail) == 8
+    now = time.time()
+    for s in tail:
+        assert s["name"] == "measure" and s["cat"] == "measure"
+        assert s["dur_s"] >= 0.0
+        assert abs(s["wall_s"] - now) < 60.0  # anchored to the wall clock
+    assert obs.NOOP.recent_spans() == []
+
+
+# --------------------------------------------------------------- trace_diff
+
+def _write_trace(tmp_path, name, phase_s, measure_s):
+    tr = obs.Tracer(name="d")
+    tr.add_span_mono("phase:seed", cat="phase", start_mono_s=0.0,
+                     dur_s=phase_s)
+    tr.add_span_mono("measure", cat="measure", start_mono_s=0.0,
+                     dur_s=measure_s)
+    path = str(tmp_path / name)
+    tr.save(path)
+    return path
+
+
+def test_trace_diff_same_trace_passes_gate(tmp_path, capsys):
+    td = _load_tool("trace_diff")
+    old = _write_trace(tmp_path, "a.json", 1.0, 0.5)
+    new = _write_trace(tmp_path, "b.json", 1.0, 0.5)
+    assert td.main([old, new, "--fail-on-regression", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "phase:seed" in out and "+0.0%" in out
+
+
+def test_trace_diff_flags_injected_slowdown(tmp_path, capsys):
+    td = _load_tool("trace_diff")
+    old = _write_trace(tmp_path, "a.json", 1.0, 0.5)
+    slow = _write_trace(tmp_path, "c.json", 1.6, 0.5)  # +60% in the phase
+    assert td.main([old, slow]) == 0  # report-only without the gate
+    capsys.readouterr()
+    assert td.main([old, slow, "--fail-on-regression", "25"]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "phase:seed" in out
+    rows = td.diff_rows({"p": 1.0}, {"p": 1.6, "q": 2.0})
+    assert rows == [("p", 1.0, 1.6, pytest.approx(60.0)),
+                    ("q", 0.0, 2.0, float("inf"))]
+    # brand-new rows (no old baseline) never fail the gate
+    assert td.regressions(rows, 25.0, 0.05) == [("p", 1.0, 1.6,
+                                                 pytest.approx(60.0))]
+
+
+def test_trace_diff_noise_floor_protects_tiny_rows(tmp_path):
+    td = _load_tool("trace_diff")
+    old = _write_trace(tmp_path, "a.json", 0.01, 0.002)
+    new = _write_trace(tmp_path, "b.json", 0.04, 0.004)  # +300%, all tiny
+    assert td.main([old, new, "--fail-on-regression", "25"]) == 0
+    assert td.main([old, new, "--fail-on-regression", "25",
+                    "--min-s", "0.001"]) == 1
+
+
+# ------------------------------------------------------------ bench_compare
+
+def _bench_doc(tmp_path, name, schema="repro-bench/2", **metrics):
+    doc = {"schema": schema, "bench": "b", "created_unix": 1.0,
+           "git_rev": "abc", "config": {}, "metrics": metrics}
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def test_bench_compare_deltas_direction_and_gate(tmp_path, capsys):
+    bc = _load_tool("bench_compare")
+    old = _bench_doc(tmp_path, "old.json", coopt_network_latency_s=1.0,
+                     coopt_speedup_vs_frozen=2.0, coopt_measurements=100.0,
+                     phase_times={"phase:seed": 1.0})
+    new = _bench_doc(tmp_path, "new.json", coopt_network_latency_s=1.5,
+                     coopt_speedup_vs_frozen=1.0, coopt_measurements=200.0,
+                     phase_times={"phase:seed": 1.1})
+    rows = bc.compare(bc.load(old), bc.load(new))
+    byname = {r[0]: r for r in rows}
+    assert byname["phase_times.phase:seed"][3] == pytest.approx(10.0)
+    assert byname["coopt_network_latency_s"][4] == -1   # lower is better
+    assert byname["coopt_speedup_vs_frozen"][4] == +1   # higher is better
+    assert byname["coopt_measurements"][4] is None      # count: ungated
+    assert bc.main([old, new]) == 0  # report-only
+    capsys.readouterr()
+    assert bc.main([old, new, "--fail-on-regression", "20"]) == 1
+    out = capsys.readouterr().out
+    # latency +50% and speedup -50% both fail; phase +10% and the
+    # direction-less measurement count never can
+    assert "REGRESSION: 2 metric(s)" in out
+    assert bc.main([old, new, "--fail-on-regression", "60"]) == 0
+    capsys.readouterr()
+    assert bc.main([old, new, "--keys", "phase_times.phase:seed",
+                    "--fail-on-regression", "20"]) == 0
+    capsys.readouterr()
+    with pytest.raises(KeyError):
+        bc.compare(bc.load(old), bc.load(new), keys=["nope"])
+
+
+def test_bench_compare_rejects_malformed_docs(tmp_path):
+    bc = _load_tool("bench_compare")
+    with pytest.raises(ValueError, match="finite"):
+        bc.load(_bench_doc(tmp_path, "nan.json", lat_s=float("nan")))
+    with pytest.raises(ValueError, match="schema"):
+        bc.load(_bench_doc(tmp_path, "v3.json", schema="repro-bench/3",
+                           lat_s=1.0))
+    with pytest.raises(ValueError):  # unsanctioned nesting
+        bc.validate({"schema": "repro-bench/2", "bench": "b",
+                     "created_unix": 1.0, "git_rev": "a", "config": {},
+                     "metrics": {"other": {"x": 1.0}}})
+    with pytest.raises(ValueError):  # /1 never allowed phase_times
+        bc.load(_bench_doc(tmp_path, "v1.json", schema="repro-bench/1",
+                           lat_s=1.0, phase_times={"p": 1.0}))
+    with pytest.raises(ValueError, match="metrics"):
+        bc.validate({"schema": "repro-bench/2", "bench": "b",
+                     "created_unix": 1.0, "git_rev": "a", "config": {},
+                     "metrics": {}})
+
+
+def test_committed_bench_artifacts_validate():
+    """Every BENCH_*.json in the repo passes both the canonical
+    validator and bench_compare's standalone mirror — the regression
+    gate can always consume what the benchmarks commit."""
+    tr = _load_benchmarks("tuning_runs")
+    bc = _load_tool("bench_compare")
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    assert paths, "no committed bench artifacts found"
+    for path in paths:
+        doc = json.loads(open(path).read())
+        assert tr.validate_bench_doc(doc) is doc, path
+        assert bc.validate(doc) is doc, path
+
+
+# ----------------------------------------------- session + monitor wiring
+
+def test_session_final_scrape_matches_report_borrowed_server():
+    srv = MonitorServer(port=0).start()
+    try:
+        task = TuningTask.from_space("c", DesignSpace.for_conv2d(WL_MID),
+                                     multiplicity=3)
+        rep = Session(task, tuner=TINY, budget=8, seed=3,
+                      monitor=srv).run()
+        assert srv.running  # borrowed: the session must NOT stop it
+        st = _get_json(srv.url + "/status")["sources"]["session"]
+        assert st["final"] is True and st["kind"] == "session"
+        assert st["tasks"]["c"]["best_latency"] == rep.single.best_latency
+        assert st["measurements"] == rep.single.n_measurements
+        assert st["best_network_latency"] == pytest.approx(
+            rep.single.best_latency * 3)
+        assert st["oracle"]["hits"] + st["oracle"]["misses"] > 0
+        _status, text = _get(srv.url + "/metrics")
+        assert _metric_value(text, "repro_session_measurements") \
+            == rep.single.n_measurements
+        # the frozen gauge equals the report exactly — not approximately
+        assert _metric_value(text, "repro_session_network_latency") \
+            == rep.single.best_latency * 3
+    finally:
+        srv.stop()
+
+
+def test_session_owned_monitor_stops_with_run():
+    before = set(obs.active_servers())
+    task = TuningTask.from_space("c", DesignSpace.for_conv2d(WL_MID))
+    Session(task, tuner=TINY, budget=8, monitor=0).run()
+    assert set(obs.active_servers()) == before  # owned server torn down
+
+
+def test_session_reports_byte_identical_with_monitor_on_off():
+    docs = {}
+    for label, monitor in (("off", None), ("on", 0)):
+        task = TuningTask.from_space("c", DesignSpace.for_conv2d(WL_MID))
+        doc = Session(task, tuner=TINY, budget=8, seed=5,
+                      monitor=monitor).run().to_dict()
+        doc["wall_time_s"] = 0.0
+        doc["executor_stats"] = {}
+        for rep in doc["reports"].values():
+            rep["wall_time_s"] = 0.0
+            rep["history"] = [[n, lat, 0.0] for n, lat, _ in rep["history"]]
+        docs[label] = json.dumps(doc, sort_keys=True)
+    assert docs["on"] == docs["off"]
+
+
+# -------------------------------------------- netopt acceptance, live run
+
+def _stub_conv_tasks():
+    def factory(task, records, workers=0, timeout_s=None, executor=None):
+        if executor is not None:
+            return SettingsOracle(task.space, fn=None, executor=executor,
+                                  task=task.name, records=records,
+                                  worker_spec=STUB_SPEC)
+        return SettingsOracle(task.space, fn=make_stub(), task=task.name,
+                              records=records)
+    return [TuningTask(name="c1", space=DesignSpace.for_conv2d(WL_BIG),
+                       oracle_factory=factory, multiplicity=2),
+            TuningTask(name="c2", space=DesignSpace.for_conv2d(WL_MID),
+                       oracle_factory=factory, multiplicity=1)]
+
+
+def test_netopt_live_monitor_final_scrape_matches_report():
+    """The acceptance bar: a netopt run over a loopback remote daemon,
+    scraped WHILE running, whose final ``/metrics`` values equal the
+    ``NetworkReport`` exactly and whose ``/status`` carries fleet
+    health down to the daemon's heartbeat load."""
+    cfg = NetOptConfig(seed_candidates=2, hw_rounds=1, hw_per_round=1,
+                       layer_budget=4, refine_budget=4, tuner=TINY)
+    srv = MonitorServer(port=0).start()
+    daemon = WorkerDaemon(slots=2, heartbeat_s=0.2).start()
+    live, stop_polling = [], threading.Event()
+
+    def poll():
+        while not stop_polling.is_set():
+            try:
+                live.append(_get_json(srv.url + "/status"))
+            except Exception:
+                pass
+            time.sleep(0.05)
+
+    poller = threading.Thread(target=poll, daemon=True)
+    poller.start()
+    try:
+        ex = RemoteExecutor(daemon.endpoint, heartbeat_s=0.1,
+                            heartbeat_timeout_s=5.0)
+        try:
+            rep = NetworkCoOptimizer(_stub_conv_tasks(), cfg, remote=ex,
+                                     name="obs-net", monitor=srv).run()
+        finally:
+            ex.close()
+    finally:
+        stop_polling.set()
+        poller.join(timeout=5.0)
+        daemon.stop()
+    try:
+        mid_run = [s["sources"]["netopt:obs-net"] for s in live
+                   if "netopt:obs-net" in s.get("sources", {})
+                   and not s["sources"]["netopt:obs-net"].get("final")]
+        assert mid_run, "no successful /status scrape while running"
+        assert all(s["kind"] == "netopt" for s in mid_run)
+        # the final scrape equals the report EXACTLY
+        _status, text = _get(srv.url + "/metrics")
+        assert _metric_value(text, "repro_netopt_best_network_latency_s") \
+            == rep.network_latency
+        assert _metric_value(text, "repro_netopt_measurements") \
+            == rep.total_measurements
+        assert _metric_value(text, "repro_executor_remote_jobs") > 0
+        st = _get_json(srv.url + "/status")["sources"]["netopt:obs-net"]
+        assert st["final"] is True and st["phase"] == "refine"
+        assert st["best_network_latency"] == rep.network_latency
+        # fleet health: per-endpoint detail incl. daemon heartbeat load
+        ep = st["executor"]["endpoints"][daemon.endpoint]
+        assert ep["jobs"] > 0 and ep["daemon"]["busy"] == 0
+    finally:
+        srv.stop()
+
+
+def test_worker_daemon_self_serves_status_and_metrics():
+    daemon = WorkerDaemon(slots=2, heartbeat_s=0.2, status_port=0).start()
+    try:
+        deadline = time.monotonic() + 10.0
+        while not daemon.monitor.running and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert daemon.monitor.running
+        st = _get_json(daemon.monitor.url + "/status")["sources"]["worker"]
+        assert st["kind"] == "worker" and st["endpoint"] == daemon.endpoint
+        assert st["slots"] == 2 and st["load"]["jobs_done"] == 0
+        ex = RemoteExecutor(daemon.endpoint, heartbeat_s=0.1,
+                            heartbeat_timeout_s=5.0)
+        try:
+            handles = [ex.submit("t", {"model_axis": 1 << i},
+                                 spec=STUB_SPEC) for i in range(3)]
+            ex.drain(handles)
+            assert all(h.result().ok for h in handles)
+        finally:
+            ex.close()
+        _status, text = _get(daemon.monitor.url + "/metrics")
+        assert _metric_value(text, "repro_worker_jobs_done") == 3
+        assert _metric_value(text, "repro_worker_busy") == 0
+        monitor = daemon.monitor
+    finally:
+        daemon.stop()
+    assert not monitor.running  # stopped with the daemon
+
+
+# --------------------------------------------------------- CLI smoke test
+
+def test_cli_tune_monitor_smoke(capsys):
+    """``--monitor 0`` on the CLI: the ephemeral server is discoverable
+    via ``active_servers()``, serves a ``/status`` poll mid-run, and is
+    gone after a clean exit."""
+    before = set(obs.active_servers())
+    rc = {}
+
+    def run():
+        rc["v"] = cli_main(["tune", "--matmul", "64x64x64", "--budget", "4",
+                            "--monitor", "0"])
+
+    th = threading.Thread(target=run)
+    th.start()
+    srv = None
+    try:
+        deadline = time.monotonic() + 60.0
+        while srv is None and time.monotonic() < deadline:
+            fresh = [s for s in obs.active_servers() if s not in before]
+            if fresh:
+                srv = fresh[0]
+            elif not th.is_alive():
+                break
+            else:
+                time.sleep(0.01)
+        assert srv is not None, "--monitor 0 never started a server"
+        st = _get_json(srv.url + "/status")
+        assert st["sources"]["session"]["kind"] == "session"
+        _status, text = _get(srv.url + "/metrics")
+        assert "repro_session_measurements" in text
+    finally:
+        th.join(timeout=300.0)
+    capsys.readouterr()
+    assert rc.get("v") == 0 and not th.is_alive()
+    assert set(obs.active_servers()) == before  # shut down cleanly

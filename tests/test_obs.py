@@ -167,7 +167,8 @@ def test_metrics_registry_and_executor_stats_mapping():
     assert snap["counters"]["executor.remote.jobs"] == 12.0
     assert snap["gauges"]["executor.remote.workers_alive"] == 2.0
     assert snap["histograms"]["lat"] == {"count": 3, "sum": 6.0, "min": 1.0,
-                                         "max": 3.0, "mean": 2.0}
+                                         "max": 3.0, "mean": 2.0,
+                                         "p50": 2.0, "p90": 3.0, "p99": 3.0}
 
 
 # ------------------------------------------------------------ export forms

@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Validate and compare two ``BENCH_*.json`` artifacts; CI regression gate.
+
+Both inputs must be well-formed ``repro-bench/1`` or ``/2`` documents
+(the validation rules here deliberately mirror
+``benchmarks/tuning_runs.py::validate_bench_doc`` — this tool stays
+stdlib-only and importable without the benchmarks' jax dependencies, so
+it re-states the contract instead of importing it; keep the two in
+sync).  It reports entry-wise metric deltas, including the ``/2``
+``phase_times`` nested block (flattened as ``phase_times.<name>``), and
+can gate CI::
+
+    python tools/bench_compare.py BENCH_old.json BENCH_new.json \
+        --fail-on-regression 20
+
+A metric *regresses* directionally: lower is better for latency-like
+names (``*_s``, ``*latency*``, ``*time*``), higher is better for
+``*speedup*``/``*x``/``*gflops*``/``*per_sec*`` names; metrics with no
+recognized direction (counts, budgets) are reported but never gated.
+``--keys`` restricts the comparison to named metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import numbers
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BENCH_SCHEMAS = ("repro-bench/1", "repro-bench/2")
+
+LOWER_BETTER = ("latency", "time", "_s")
+HIGHER_BETTER = ("speedup", "gflops", "per_sec", "throughput", "_x")
+
+
+def _check_metric(k, v, where: str) -> None:
+    if not isinstance(k, str):
+        raise ValueError(f"{where} name {k!r} is not a str")
+    if isinstance(v, bool) or not isinstance(v, numbers.Real) \
+            or not math.isfinite(float(v)):
+        raise ValueError(f"{where} {k!r} must be a finite float, got {v!r}")
+
+
+def validate(doc: Dict) -> Dict:
+    """Standalone mirror of ``validate_bench_doc``: schema in
+    ``repro-bench/1|2``, nonempty str ``bench``/``git_rev``, numeric
+    ``created_unix``, dict ``config``, nonempty flat finite-float
+    ``metrics`` — with ``metrics["phase_times"]`` the one sanctioned
+    nested (flat name -> finite seconds) block, ``/2`` only."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"bench doc must be a dict, got {type(doc)}")
+    if doc.get("schema") not in BENCH_SCHEMAS:
+        raise ValueError(f"bench schema {doc.get('schema')!r} not in "
+                         f"{BENCH_SCHEMAS!r}")
+    if not doc.get("bench") or not isinstance(doc["bench"], str):
+        raise ValueError("bench doc needs a nonempty str 'bench' name")
+    if not isinstance(doc.get("created_unix"), numbers.Real):
+        raise ValueError("bench doc needs a numeric 'created_unix'")
+    if not doc.get("git_rev") or not isinstance(doc["git_rev"], str):
+        raise ValueError("bench doc needs a nonempty str 'git_rev'")
+    if not isinstance(doc.get("config"), dict):
+        raise ValueError("bench doc needs a dict 'config'")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        raise ValueError("bench doc needs a nonempty 'metrics' dict")
+    for k, v in metrics.items():
+        if (k == "phase_times" and doc["schema"] == "repro-bench/2"
+                and isinstance(v, dict)):
+            for pk, pv in v.items():
+                _check_metric(pk, pv, "phase_times entry")
+            continue
+        _check_metric(k, v, "metric")
+    return doc
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        return validate(json.load(f))
+
+
+def flat_metrics(doc: Dict) -> Dict[str, float]:
+    """Metrics with the ``phase_times`` block flattened to dotted keys."""
+    out: Dict[str, float] = {}
+    for k, v in doc["metrics"].items():
+        if isinstance(v, dict):
+            for pk, pv in v.items():
+                out[f"{k}.{pk}"] = float(pv)
+        else:
+            out[k] = float(v)
+    return out
+
+
+def direction(name: str) -> Optional[int]:
+    """-1 = lower is better, +1 = higher is better, None = ungated.
+    Higher-better suffixes win ties (``speedup_x`` ends in ``_x`` AND
+    contains ``speedup`` — both agree; ``throughput_per_sec`` must not
+    be dragged to lower-better by a ``_s``-ish match)."""
+    low = name.lower()
+    base = low.split(".")[-1]
+    if any(t in low for t in HIGHER_BETTER):
+        return +1
+    if any(t in low for t in LOWER_BETTER[:-1]) or base.endswith("_s"):
+        return -1
+    return None
+
+
+def compare(old: Dict, new: Dict, keys: Optional[List[str]] = None
+            ) -> List[Tuple[str, Optional[float], Optional[float],
+                            Optional[float], Optional[int]]]:
+    """``(name, old_v, new_v, delta_pct, direction)`` over the union of
+    flattened metric names (restricted to ``keys`` when given)."""
+    a, b = flat_metrics(old), flat_metrics(new)
+    names = sorted(set(a) | set(b))
+    if keys:
+        missing = [k for k in keys if k not in set(a) | set(b)]
+        if missing:
+            raise KeyError(f"--keys not in either artifact: {missing}")
+        names = [n for n in names if n in set(keys)]
+    rows = []
+    for n in names:
+        va, vb = a.get(n), b.get(n)
+        pct = None
+        if va is not None and vb is not None and va != 0:
+            pct = (vb - va) / abs(va) * 100.0
+        rows.append((n, va, vb, pct, direction(n)))
+    return rows
+
+
+def regressions(rows, threshold_pct: float):
+    """Directional gate: a row fails when its metric moved in the *bad*
+    direction by more than the threshold."""
+    bad = []
+    for name, va, vb, pct, sign in rows:
+        if pct is None or sign is None:
+            continue
+        worsened = pct if sign < 0 else -pct
+        if worsened > threshold_pct:
+            bad.append((name, va, vb, pct))
+    return bad
+
+
+def _fmt(v: Optional[float]) -> str:
+    return "-" if v is None else f"{v:.6g}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--keys", nargs="+", default=None,
+                    help="restrict the comparison to these metric names "
+                         "(phase_times entries as phase_times.<name>)")
+    ap.add_argument("--fail-on-regression", type=float, default=None,
+                    metavar="PCT",
+                    help="exit 1 if any direction-aware metric worsened "
+                         "by more than PCT percent")
+    args = ap.parse_args(argv)
+    old, new = load(args.old), load(args.new)
+    if old["bench"] != new["bench"]:
+        print(f"note: comparing different benches "
+              f"{old['bench']!r} -> {new['bench']!r}")
+    rows = compare(old, new, args.keys)
+    print(f"{'metric':<36s} {'old':>12s} {'new':>12s} {'delta':>9s}  dir")
+    for name, va, vb, pct, sign in rows:
+        d = "-" if pct is None else f"{pct:+.1f}%"
+        arrow = {None: " ", -1: "v", +1: "^"}[sign]
+        print(f"{name:<36s} {_fmt(va):>12s} {_fmt(vb):>12s} {d:>9s}  "
+              f"{arrow}")
+    if args.fail_on_regression is not None:
+        bad = regressions(rows, args.fail_on_regression)
+        if bad:
+            print(f"\nREGRESSION: {len(bad)} metric(s) worsened more than "
+                  f"{args.fail_on_regression:g}%:")
+            for name, va, vb, pct in bad:
+                print(f"  {name}: {_fmt(va)} -> {_fmt(vb)} ({pct:+.1f}%)")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

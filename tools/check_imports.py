@@ -53,6 +53,7 @@ REQUIRED = (
     "repro.obs.export",
     "repro.obs.log",
     "repro.obs.metrics",
+    "repro.obs.serve",
     "repro.obs.trace",
 )
 

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Diff two saved traces of the same bench: where did the time go?
+
+Compares per-phase (``cat == "phase"``) and per-category wall-time
+totals plus the overall wall extent between an *old* and a *new* trace —
+either format ``repro.obs`` writes (Chrome-trace JSON or raw JSONL).
+Sampled traces stay honest: dropped spans' exact summed seconds (from
+the trace's sampling metadata) are folded back into category totals
+before diffing.
+
+CI regression gate::
+
+    python tools/trace_diff.py old.json new.json --fail-on-regression 25
+
+exits non-zero when any compared total regressed (grew) by more than
+25% — rows below the ``--min-s`` noise floor (default 0.05 s) are
+reported but never fail the gate, so micro-jitter on near-zero phases
+cannot flap CI.
+
+Stdlib only (like everything under ``repro.obs`` and its tools).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+from typing import Dict, List, Tuple
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load_trace_summary():
+    spec = importlib.util.spec_from_file_location(
+        "trace_summary", os.path.join(_HERE, "trace_summary.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def load_totals(path: str) -> Dict[str, Dict[str, float]]:
+    """``{"phase": {...}, "category": {...}, "wall": {"extent_s": s}}``
+    for one trace file (sampling-corrected)."""
+    ts = _load_trace_summary()
+    events = ts.load_events(path)
+    sampling = ts.sampling_info(events)
+    return {
+        "phase": ts.phase_totals(events),
+        "category": ts.category_totals(events, sampling),
+        "wall": {"extent_s": ts.wall_extent_s(events)},
+    }
+
+
+def diff_rows(old: Dict[str, float], new: Dict[str, float]
+              ) -> List[Tuple[str, float, float, float]]:
+    """``(name, old_s, new_s, delta_pct)`` over the union of keys;
+    delta_pct is +inf for a new row with no old baseline."""
+    rows = []
+    for name in sorted(set(old) | set(new)):
+        a, b = float(old.get(name, 0.0)), float(new.get(name, 0.0))
+        pct = ((b - a) / a * 100.0) if a > 0 else (
+            float("inf") if b > 0 else 0.0)
+        rows.append((name, a, b, pct))
+    return rows
+
+
+def render(title: str, rows: List[Tuple[str, float, float, float]]) -> str:
+    lines = [title, f"  {'name':<28s} {'old_s':>10s} {'new_s':>10s} "
+                    f"{'delta':>8s}"]
+    for name, a, b, pct in rows:
+        d = "   new" if pct == float("inf") else f"{pct:+7.1f}%"
+        lines.append(f"  {name:<28s} {a:10.3f} {b:10.3f} {d:>8s}")
+    return "\n".join(lines)
+
+
+def regressions(rows: List[Tuple[str, float, float, float]],
+                threshold_pct: float, min_s: float
+                ) -> List[Tuple[str, float, float, float]]:
+    """Rows that *grew* past the threshold — only rows whose old total
+    clears the noise floor can fail the gate."""
+    return [r for r in rows
+            if r[1] >= min_s and r[3] != float("inf")
+            and r[3] > threshold_pct]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline trace (.json or .jsonl)")
+    ap.add_argument("new", help="candidate trace (.json or .jsonl)")
+    ap.add_argument("--fail-on-regression", type=float, default=None,
+                    metavar="PCT",
+                    help="exit 1 if any phase/category/wall total grew "
+                         "by more than PCT percent")
+    ap.add_argument("--min-s", type=float, default=0.05,
+                    help="noise floor: rows whose old total is below this "
+                         "many seconds never fail the gate (default 0.05)")
+    args = ap.parse_args(argv)
+    old, new = load_totals(args.old), load_totals(args.new)
+    bad: List[Tuple[str, str, float, float, float]] = []
+    for section, title in (("phase", "phases (cat=phase):"),
+                           ("category", "categories:"),
+                           ("wall", "wall extent:")):
+        rows = diff_rows(old[section], new[section])
+        if not rows:
+            continue
+        print(render(title, rows))
+        if args.fail_on_regression is not None:
+            bad += [(section, *r) for r in regressions(
+                rows, args.fail_on_regression, args.min_s)]
+    if bad:
+        print(f"\nREGRESSION: {len(bad)} total(s) grew more than "
+              f"{args.fail_on_regression:g}% (noise floor {args.min_s:g}s):")
+        for section, name, a, b, pct in bad:
+            print(f"  [{section}] {name}: {a:.3f}s -> {b:.3f}s "
+                  f"({pct:+.1f}%)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,14 +40,23 @@ def load_events(path: str) -> List[Dict[str, object]]:
     except ValueError:
         doc = None
     if isinstance(doc, dict) and "traceEvents" in doc:
-        return [{
+        rows = [{
             "name": ev.get("name", "?"),
             "cat": ev.get("cat", ""),
             "ph": ev.get("ph", "X"),
             "tid": ev.get("tid", ""),
             "start_s": float(ev.get("ts", 0.0)) / 1e6,
             "dur_s": float(ev.get("dur", 0.0)) / 1e6,
+            "args": ev.get("args", {}),
         } for ev in doc["traceEvents"]]
+        # a sampled tracer's kept/dropped bookkeeping rides in otherData;
+        # surface it as the same "M" metadata row the JSONL form carries
+        sampling = (doc.get("otherData") or {}).get("sampling")
+        if sampling:
+            rows.append({"name": "sampling", "cat": "", "ph": "M",
+                         "tid": "", "start_s": 0.0, "dur_s": 0.0,
+                         "args": sampling})
+        return rows
     rows = []
     for line in text.splitlines():
         line = line.strip()
@@ -61,8 +70,19 @@ def load_events(path: str) -> List[Dict[str, object]]:
             "tid": ev.get("tid", ""),
             "start_s": float(ev.get("wall_s", 0.0)),
             "dur_s": float(ev.get("dur", 0.0)),
+            "args": ev.get("args", {}),
         })
     return rows
+
+
+def sampling_info(events: Iterable[Dict[str, object]]) -> Dict[str, object]:
+    """The trace's span-sampling bookkeeping (``{}`` for unsampled
+    traces): ``{"sample_rate": r, "cats": {cat: {kept, dropped,
+    dropped_dur_s}}}``."""
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "sampling":
+            return dict(e.get("args") or {})
+    return {}
 
 
 def union_seconds(spans: Iterable[Dict[str, object]]) -> float:
@@ -98,11 +118,21 @@ def phase_totals(events: Iterable[Dict[str, object]]) -> Dict[str, float]:
     return out
 
 
-def category_totals(events: Iterable[Dict[str, object]]) -> Dict[str, float]:
+def category_totals(events: Iterable[Dict[str, object]],
+                    sampling: Dict[str, object] = None
+                    ) -> Dict[str, float]:
+    """Summed seconds per category.  With a sampled trace's bookkeeping
+    passed in, the dropped spans' exact summed duration is added back so
+    totals stay honest (the *count* of spans is reduced; their seconds
+    are not)."""
     out: Dict[str, float] = {}
     for s in _spans(events):
         cat = s["cat"] or "default"
         out[cat] = out.get(cat, 0.0) + s["dur_s"]
+    for cat, info in ((sampling or {}).get("cats") or {}).items():
+        dropped = float(info.get("dropped_dur_s", 0.0))
+        if dropped:
+            out[cat] = out.get(cat, 0.0) + dropped
     return out
 
 
@@ -137,10 +167,17 @@ def summarize(path: str) -> str:
     spans = _spans(events)
     wall = wall_extent_s(events)
     phases = phase_totals(events)
+    sampling = sampling_info(events)
     parts = [
         f"trace: {path}",
         f"spans: {len(spans)}   wall extent: {wall:.3f} s",
     ]
+    if sampling:
+        dropped = sum(int(c.get("dropped", 0))
+                      for c in (sampling.get("cats") or {}).values())
+        parts.append(f"sampled trace (rate={sampling.get('sample_rate')}):"
+                     f" {dropped} spans dropped; their seconds are"
+                     f" included in category totals")
     if phases:
         covered = union_seconds(
             [s for s in spans if s["cat"] == "phase"])
@@ -148,7 +185,8 @@ def summarize(path: str) -> str:
         parts.append(_table("phases (cat=phase):", phases, wall))
         parts.append(f"  phase union coverage: {covered:.3f} s"
                      f" ({pct:.1f}% of wall extent)")
-    parts.append(_table("categories:", category_totals(events), wall))
+    parts.append(_table("categories:", category_totals(events, sampling),
+                        wall))
     meas = tid_totals(events, "measure")
     if len(meas) > 1:
         parts.append(_table("measure seconds by tid/endpoint:", meas, wall))
