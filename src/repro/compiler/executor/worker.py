@@ -318,9 +318,11 @@ class WorkerDaemon:
 
     def serve_forever(self) -> None:
         if self.monitor is not None:
-            self.monitor.start()
+            # attach BEFORE start: the instant `running` flips true a
+            # scraper may hit /status, and it must already see "worker"
             self.monitor.attach("worker", self._status,
                                 collector=self._collect_metrics)
+            self.monitor.start()
             log.log("warn" if self.verbose else "info",
                     f"worker daemon status at {self.monitor.url}")
         log.log("warn" if self.verbose else "info",

@@ -149,9 +149,9 @@ def _resnet_bert() -> NetworkTask:
 
 # ------------------------------------------------------------ pod network
 
-def _pod_proxy_measure(n_layers: int, d_model: int, seq: int, batch: int,
-                       n_devices: int, train: bool
-                       ) -> Callable[[Dict[str, object]], float]:
+def pod_proxy_measure(n_layers: int, d_model: int, seq: int, batch: int,
+                      n_devices: int, train: bool
+                      ) -> Callable[[Dict[str, object]], float]:
     """Deterministic roofline-style step-time proxy for one LM cell —
     compute/collective/HBM terms over the sharding knobs, with hinge
     penalties for HBM overflow.  Shaped like the real dry-run estimator
@@ -231,9 +231,9 @@ def _pod_network(name: str, arch: str, n_devices: int) -> NetworkTask:
     for shape_name, mult in (("train_4k", 1), ("prefill_32k", 2),
                              ("decode_32k", 4)):
         cell = SHAPES[shape_name]
-        fn = _pod_proxy_measure(cfg.n_layers, cfg.d_model, cell.seq,
-                                cell.global_batch, n_devices,
-                                train=cell.kind == "train")
+        fn = pod_proxy_measure(cfg.n_layers, cfg.d_model, cell.seq,
+                               cell.global_batch, n_devices,
+                               train=cell.kind == "train")
         space = ShardSpace.for_cell(arch, shape_name, measure_fn=fn,
                                     n_devices=n_devices)
         tasks.append(TuningTask.from_space(f"pod:{arch}/{shape_name}",

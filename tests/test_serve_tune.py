@@ -1,0 +1,206 @@
+"""Online tuning-as-a-service (:mod:`repro.compiler.serve_tune`): the
+idle-slot executor's control inversion, the admission-aware preemption
+contract, SLA-violation reward penalties, online-vs-offline convergence,
+warm resume through the stock records machinery, and the monitor's
+``serve`` /status source.
+
+Everything except the live-server test runs on the virtual-time sim host
+— deterministic and sub-second."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.compiler.serve_tune import (IdleSlotExecutor, LiveServeHost,
+                                       ServeModel, ServeReport, ServeSLA,
+                                       SimServeHost, TraceConfig,
+                                       synthetic_trace, tune_while_serving)
+from repro.core import mappo
+from repro.core.tuner import TunerConfig
+
+TINY = TunerConfig(iteration_opt=2, b_measure=4, episodes_per_iter=1,
+                   mappo=mappo.MappoConfig(n_steps=8, n_envs=4),
+                   gbt_rounds=5)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return ServeModel()
+
+
+# ---------------------------------------------------------------- trace
+
+def test_synthetic_trace_deterministic_and_plausible():
+    cfg = TraceConfig(n_requests=5000, rate_per_s=50.0, seed=9)
+    a = list(synthetic_trace(cfg))
+    assert a == list(synthetic_trace(cfg))  # same seed -> same trace
+    assert len(a) == 5000
+    times = [t for t, _, _ in a]
+    assert times == sorted(times) and times[0] > 0
+    for _, plen, mnew in a:
+        assert cfg.prompt_len[0] <= plen <= cfg.prompt_len[1]
+        assert cfg.max_new[0] <= mnew <= cfg.max_new[1]
+    # bursts only ever speed arrivals up: duration is bounded by the
+    # base-rate expectation and below by the all-burst expectation
+    assert (5000 / (cfg.rate_per_s * cfg.burst_factor)
+            < times[-1] < 2.0 * 5000 / cfg.rate_per_s)
+    assert list(synthetic_trace(
+        TraceConfig(n_requests=100, seed=1))) != list(synthetic_trace(
+            TraceConfig(n_requests=100, seed=2)))
+
+
+# ------------------------------------------------- preemption + penalty
+
+def test_sla_violations_penalize_inflight_measurement(model):
+    """Requests that violate the SLA while a candidate measurement is in
+    flight are folded into its measured value as a hard penalty."""
+    sla = ServeSLA(target_s=0.0, measure_penalty_s=10.0)  # all violate
+    host = SimServeHost(model, [(0.5, 8, 4), (0.6, 8, 4)], sla=sla,
+                        measure_cost_s=5.0)
+    ex = IdleSlotExecutor(host)
+    fn = model.measure_fn("decode")
+    host.register_task("t", "decode", fn)
+    settings = model.default_settings["decode"]
+    handle = ex.submit("t", settings)
+    assert not handle.done()  # only queued: no idle time has passed yet
+    ex.drain([handle])
+    res = handle.result()
+    assert res.ok
+    raw = model.cost_s("decode", settings)
+    # both requests finished mid-measurement and violated: 2 hard hits
+    assert res.value == pytest.approx(raw + 2 * sla.measure_penalty_s)
+    assert host.served == 2 and host.violations == 2
+    # the stats surface speaks the uniform executor schema
+    st = ex.stats()
+    assert {"kind", "workers_alive", "respawns", "queued", "running",
+            "max_inflight", "jobs", "failures"} <= set(st)
+    assert st["kind"] == "idle-slot" and st["jobs"] == 1
+
+
+def test_measurements_only_progress_in_idle_windows(model):
+    """With traffic saturating every slot from t=0, a queued measurement
+    makes no progress until the backlog clears."""
+    # 4 slots, 8 concurrent long requests -> no idle capacity for a while
+    trace = [(0.0, 8, 200)] * 8
+    host = SimServeHost(model, trace, sla=ServeSLA(target_s=1e9),
+                        n_slots=4, measure_cost_s=0.01)
+    ex = IdleSlotExecutor(host)
+    host.register_task("t", "decode", model.measure_fn("decode"))
+    handle = ex.submit("t", model.default_settings["decode"])
+    job = host.jobs[0]
+    while host.served < 8:
+        assert host.pump()
+        if host.served < 4:  # both waves still occupy every slot
+            assert job.progress_s == 0.0
+    ex.drain([handle])
+    assert handle.result().ok
+
+
+# ------------------------------------------------------ end-to-end (sim)
+
+def test_online_converges_to_offline_within_10pct(model):
+    host = SimServeHost(model,
+                        TraceConfig(n_requests=3000, rate_per_s=100.0,
+                                    seed=1),
+                        sla=ServeSLA(target_s=0.5),
+                        measure_cost_s=0.05, tune_after_s=5.0)
+    rep = tune_while_serving(host, tuner=TINY, budget=8, seed=0)
+    s = rep.serve
+    assert s["served"] == 3000
+    # the headline: online search within 10% of offline, SLA held
+    assert min(rep.convergence.values()) >= 0.9
+    assert s["violation_pct"] < 3.0
+    # both phases populated; tuning visibly helped
+    assert s["before"]["n_requests"] > 0 and s["after"]["n_requests"] > 0
+    assert s["after"]["p99_latency_s"] < s["before"]["p99_latency_s"]
+    assert s["switches"] and s["tuned_from_s"] >= 5.0
+    # measurement accounting: jobs ran on idle slots only, preemption
+    # does not lose accrued progress
+    assert 0 < s["measurements"] <= 16
+    assert s["measure_idle_s"] == pytest.approx(0.05 * s["measurements"])
+    assert s["preempted"] >= 0 and s["measure_failures"] == 0
+    # report round-trips through JSON
+    rt = ServeReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert rt.serve["served"] == 3000
+    assert rt.convergence == rep.convergence
+    assert rt.session.reports.keys() == rep.session.reports.keys()
+
+
+def test_warm_resume_replays_without_new_measurements(model, tmp_path):
+    """records= warm resume works unchanged through the idle-slot path:
+    the rerun replays every measurement from the JSONL and still ends up
+    serving under the tuned geometry (applied from the session winner,
+    not from job completions)."""
+    records = str(tmp_path / "serve_records.jsonl")
+    trace = TraceConfig(n_requests=600, rate_per_s=200.0, seed=4)
+    host1 = SimServeHost(model, trace, measure_cost_s=0.02)
+    rep1 = tune_while_serving(host1, tuner=TINY, budget=8, seed=0,
+                              records=records, offline_compare=False)
+    assert rep1.serve["measurements"] > 0
+    host2 = SimServeHost(model, trace, measure_cost_s=0.02)
+    rep2 = tune_while_serving(host2, tuner=TINY, budget=8, seed=0,
+                              records=records, offline_compare=False)
+    assert rep2.serve["measurements"] == 0  # pure replay
+    assert rep2.online == rep1.online
+    for name, r1 in rep1.session.reports.items():
+        assert rep2.session.reports[name].best_latency == r1.best_latency
+    # the tuned geometry landed anyway and the tail was served under it
+    assert rep2.serve["geometry"]["decode"] == \
+        rep1.online["decode"]["settings"]
+    assert rep2.serve["after"]["n_requests"] > 0
+
+
+def test_monitor_gains_serve_source(model):
+    import urllib.request
+
+    from repro.obs.serve import MonitorServer
+    mon = MonitorServer(port=0).start()
+    try:
+        host = SimServeHost(model,
+                            TraceConfig(n_requests=400, rate_per_s=200.0,
+                                        seed=3),
+                            measure_cost_s=0.02)
+        rep = tune_while_serving(host, tuner=TINY, budget=8, monitor=mon,
+                                 offline_compare=False)
+        assert mon.running  # borrowed: never stopped by the run
+        with urllib.request.urlopen(mon.url + "/status") as r:
+            sources = json.loads(r.read())["sources"]
+        # the run attached BOTH a serve source and the session's own
+        assert "serve" in sources and "session" in sources
+        serve = sources["serve"]
+        assert serve["final"] is True
+        assert serve["served"] == rep.serve["served"]
+        assert serve["measurements"]["done"] == rep.serve["measurements"]
+        assert serve["queued"] == 0 and serve["active"] == 0
+    finally:
+        mon.stop()
+
+
+# ------------------------------------------------------------- live host
+
+def test_live_host_tunes_on_a_real_server():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.train.server import Server
+
+    cfg = get_config("smollm-360m", reduced=True).with_(
+        dtype=jnp.float32, param_dtype=jnp.float32, remat=False)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    srv = Server(params, cfg, n_slots=2, max_len=32)
+    host = LiveServeHost(
+        srv,
+        TraceConfig(n_requests=8, rate_per_s=100.0, prompt_len=(4, 8),
+                    max_new=(2, 4), seed=2),
+        sla=ServeSLA(target_s=60.0), vocab=cfg.vocab, seed=0)
+    rep = tune_while_serving(host, tuner=TINY, budget=4,
+                             offline_compare=False)
+    assert rep.serve["served"] == 8
+    assert rep.serve["measurements"] > 0  # ran through best_effort ticks
+    assert not srv.abandoned and not srv.rejected
+    for r in host.done:
+        assert r.ok and r.latency_s == pytest.approx(
+            r.queue_s + r.prefill_s + r.decode_s, rel=1e-6)
+    assert set(rep.online) == {"decode", "prefill"}
